@@ -1,0 +1,21 @@
+"""Fig. 16 — CHR vs cache size (fraction of total dataset volume)."""
+from __future__ import annotations
+
+from .common import build_world, csv_row, run_sim
+
+
+def main(scale: float = 1.0, seed: int = 0):
+    rows = []
+    for frac in (0.2, 0.35, 0.5, 0.75, 1.0):
+        suite, store, cap = build_world(scale=scale, seed=seed,
+                                        cache_ratio=frac)
+        igt, _ = run_sim(suite, store, cap, "igtcache")
+        jfs, _ = run_sim(suite, store, cap, "juicefs")
+        rows.append(csv_row(f"fig16.cache_{int(frac*100)}pct.igtcache_chr",
+                            round(igt.hit_ratio, 3),
+                            f"juicefs={jfs.hit_ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

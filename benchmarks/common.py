@@ -1,0 +1,50 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import CacheConfig, IGTCache, bundle  # noqa: E402
+from repro.core.types import MB  # noqa: E402
+from repro.sim import ClusterSim, make_paper_suite  # noqa: E402
+from repro.storage import RemoteStore  # noqa: E402
+
+
+def scaled_cfg(capacity: int, **kw) -> CacheConfig:
+    """Paper hyper-parameters with size-proportional shares (the paper's
+    640 MB min-share/quantum is ~0.4 % of its 150 GB cache)."""
+    share = max(16 * MB, capacity // 128)
+    defaults = dict(min_share=share, rebalance_quantum=share,
+                    rebalance_period=10.0,
+                    prefetch_budget_bytes=max(64 * MB, capacity // 8))
+    defaults.update(kw)
+    return CacheConfig(**defaults)
+
+
+def build_world(scale: float = 1.0, seed: int = 0, job_filter=None,
+                cache_ratio: float = 0.35):
+    suite = make_paper_suite(scale=scale, seed=seed, job_filter=job_filter)
+    store = RemoteStore()
+    for ds in suite.datasets.values():
+        store.add(ds)
+    cap = int(cache_ratio * suite.total_bytes())
+    return suite, store, cap
+
+
+def run_sim(suite, store, cap, bundle_name: str, cfg: CacheConfig = None,
+            capacity_override: int = None, **sim_kw):
+    capacity = cap if capacity_override is None else capacity_override
+    eng = IGTCache(store, capacity, cfg=cfg or scaled_cfg(cap),
+                   options=bundle(bundle_name))
+    sim = ClusterSim(suite, eng, **sim_kw)
+    res = sim.run()
+    return res, eng
+
+
+def csv_row(name: str, value, derived: str = "") -> str:
+    line = f"{name},{value},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,46 @@
+"""Fig. 8 — end-to-end JCT + CHR across the 18-job heterogeneous suite."""
+from __future__ import annotations
+
+from .common import build_world, csv_row, run_sim, scaled_cfg
+
+
+def main(scale: float = 1.0, seed: int = 0):
+    suite, store, cap = build_world(scale=scale, seed=seed)
+    rows = []
+    results = {}
+    for name in ("igtcache", "juicefs", "nocache"):
+        if name == "nocache":
+            res, _ = run_sim(suite, store, cap, "prefetch_none",
+                             capacity_override=0)
+        else:
+            res, _ = run_sim(suite, store, cap, name)
+        results[name] = res
+
+    ig, ju, nc = results["igtcache"], results["juicefs"], results["nocache"]
+    rows.append(csv_row("fig8.igtcache.avg_jct_s", round(ig.avg_jct, 1),
+                        f"chr={ig.hit_ratio:.3f}"))
+    rows.append(csv_row("fig8.juicefs.avg_jct_s", round(ju.avg_jct, 1),
+                        f"chr={ju.hit_ratio:.3f}"))
+    rows.append(csv_row("fig8.nocache.avg_jct_s", round(nc.avg_jct, 1),
+                        "chr=0.000"))
+    rows.append(csv_row("fig8.jct_reduction_vs_juicefs_pct",
+                        round((1 - ig.avg_jct / ju.avg_jct) * 100, 1),
+                        "paper=52.2"))
+    rows.append(csv_row("fig8.chr_gain_vs_juicefs_pct",
+                        round((ig.hit_ratio / ju.hit_ratio - 1) * 100, 1),
+                        "paper=55.6"))
+    rows.append(csv_row("fig8.juicefs_vs_nocache_jct_reduction_pct",
+                        round((1 - ju.avg_jct / nc.avg_jct) * 100, 1),
+                        "paper=55.0"))
+    # per-pattern subsets (Fig 8 breakdown)
+    for pat in ("sequential", "random", "skewed", "mixed"):
+        jobs = [j.job_id for j in suite.jobs if j.pattern == pat]
+        for name, res in (("igtcache", ig), ("juicefs", ju)):
+            avg = sum(res.jct[j] for j in jobs) / len(jobs)
+            rows.append(csv_row(f"fig8.{pat}.{name}.avg_jct_s",
+                                round(avg, 1), f"n={len(jobs)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

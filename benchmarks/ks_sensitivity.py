@@ -1,0 +1,62 @@
+"""Fig. 14/15 — pattern-recognition accuracy vs K-S significance level and
+observation-window size (100 trials per stream type)."""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from repro.core.pattern import classify
+from repro.core.types import AccessRecord, CacheConfig, Pattern
+
+from .common import csv_row
+
+C = 5000
+TRIALS = 100
+
+
+def _recs(indices):
+    return [AccessRecord(int(i), C, t * 0.05, str(int(i)))
+            for t, i in enumerate(indices)]
+
+
+def gen_random(rng, window):
+    perm = list(range(C))
+    rng.shuffle(perm)
+    return _recs(perm[:window])
+
+
+def gen_skewed(nrng, window):
+    perm = nrng.permutation(C)
+    idx = perm[(nrng.zipf(1.3, window) - 1) % C]
+    return _recs(idx)
+
+
+def accuracy(alpha: float, window: int, seed: int = 0):
+    cfg = CacheConfig(alpha=alpha, window=window)
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    ok_rand = sum(
+        classify(gen_random(rng, window), C, cfg).pattern is Pattern.RANDOM
+        for _ in range(TRIALS))
+    ok_skew = sum(
+        classify(gen_skewed(nrng, window), C, cfg).pattern is Pattern.SKEWED
+        for _ in range(TRIALS))
+    return ok_rand / TRIALS, ok_skew / TRIALS
+
+
+def main(scale: float = 1.0, seed: int = 0):
+    rows = []
+    for alpha in (0.05, 0.01, 0.001):
+        r, s = accuracy(alpha, window=100, seed=seed)
+        rows.append(csv_row(f"fig14.alpha_{alpha}.random_acc", r,
+                            f"skewed_acc={s}"))
+    for window in (10, 50, 100, 1000):
+        r, s = accuracy(0.01, window=window, seed=seed)
+        rows.append(csv_row(f"fig15.window_{window}.random_acc", r,
+                            f"skewed_acc={s}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (also collected into the return
+value).  Usage:  PYTHONPATH=src python -m benchmarks.run  [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced scale for CI")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    scale = 0.3 if args.quick else 1.0
+
+    from . import (allocation_micro, cache_size_sweep, e2e_cluster,
+                   eviction_micro, ks_sensitivity, overhead, prefetch_micro,
+                   ttl_adaptive)
+    modules = {
+        "e2e_cluster": e2e_cluster,            # Fig 8
+        "prefetch_micro": prefetch_micro,      # Fig 9 (+Fig 7 ablation)
+        "eviction_micro": eviction_micro,      # Fig 10
+        "ttl_adaptive": ttl_adaptive,          # Fig 11
+        "allocation_micro": allocation_micro,  # Fig 12/13
+        "ks_sensitivity": ks_sensitivity,      # Fig 14/15
+        "cache_size_sweep": cache_size_sweep,  # Fig 16
+        "overhead": overhead,                  # Fig 17
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,value,derived")
+    for name, mod in modules.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main(scale=scale)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end driver: train an LM for a few hundred steps with every input
+byte served through IGTCache (delegates to the production launcher).
+
+    PYTHONPATH=src python examples/train_cached_lm.py --steps 200
+
+Use ``--arch mamba2-370m --reduced`` etc. to pick any assigned architecture;
+``--cache-bundle juicefs`` swaps the cache policy bundle under the SAME
+training code (the paper's "no code intrusion" property).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "qwen3-1.7b", "--reduced", "--steps", "200",
+                "--batch", "4", "--seq", "256"] + argv
+    elif "--reduced" not in argv:
+        argv = ["--reduced"] + argv
+    raise SystemExit(main(argv))

@@ -1,0 +1,248 @@
+"""AccessStreamTree (§3.1): hierarchical organization of recent accesses.
+
+Each node is an *AccessStream*: the set of accesses sharing the node's path
+prefix.  A node records, in a bounded observation window, which of its
+children each passing access descended into (``AccessRecord.index`` = the
+child's listing position, ``total`` = the listing size c).  Once a node has
+observed ``window`` accesses it becomes *non-trivial* and pattern analysis
+(§3.2) runs at that level; it re-runs every ``reanalyze_every`` accesses so a
+stream that changes behaviour (e.g. warm-up scan then random epochs) is
+re-classified promptly.
+
+Overhead controls (§4):
+  * layer compression — callers collapse single-child chain levels before
+    calling :meth:`observe` (see ``igtcache.compress_levels``); interior
+    levels with a one-entry listing store no records;
+  * child pruning — a non-trivial node keeps at most ``window`` child nodes,
+    discarding the least-recently-touched;
+  * node cap — a global LRU bound (default 10 000) on tree nodes; childless
+    nodes are detached first.
+
+Per-access update cost is O(depth + log W); the tree never exceeds
+``node_cap`` nodes (property-tested).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
+
+from .pattern import PatternResult, classify, fit_adaptive_ttl
+from .types import AccessRecord, CacheConfig, PathT, Pattern
+
+
+class AccessStream:
+    """One node of the AccessStreamTree."""
+
+    __slots__ = (
+        "key", "path", "parent", "children", "records", "times", "total",
+        "accesses", "pattern", "last_analyzed_at", "last_access_time",
+        "ttl", "child_hits", "distinct_children", "depth",
+    )
+
+    def __init__(self, key: str, path: PathT, parent: Optional["AccessStream"],
+                 window: int) -> None:
+        self.key = key
+        self.path = path
+        self.parent = parent
+        self.children: "OrderedDict[str, AccessStream]" = OrderedDict()
+        # Observation window of (index, total, child_key) + timestamps.
+        self.records: Deque[AccessRecord] = deque(maxlen=window)
+        self.times: Deque[float] = deque(maxlen=window)
+        self.total = 0              # listing size c at this level
+        self.accesses = 0
+        self.pattern = PatternResult(Pattern.UNKNOWN)
+        self.last_analyzed_at = 0
+        self.last_access_time = 0.0
+        self.ttl: Optional[float] = None
+        # child_key -> number of window accesses that touched it (for the
+        # vertical/hot-child statistics of hierarchical prefetching, §3.3).
+        self.child_hits: Dict[str, int] = {}
+        self.distinct_children = 0
+        self.depth = len(path)
+
+    # -- classification ------------------------------------------------------
+    def non_trivial(self, cfg: CacheConfig) -> bool:
+        return self.accesses >= cfg.window
+
+    def record(self, rec: AccessRecord) -> None:
+        if len(self.records) == self.records.maxlen:
+            old = self.records[0]
+            # keep child_hits consistent with the sliding window
+            h = self.child_hits.get(old.child_key)
+            if h is not None:
+                if h <= 1:
+                    del self.child_hits[old.child_key]
+                else:
+                    self.child_hits[old.child_key] = h - 1
+        self.records.append(rec)
+        self.times.append(rec.time)
+        self.child_hits[rec.child_key] = self.child_hits.get(rec.child_key, 0) + 1
+        self.accesses += 1
+        self.last_access_time = rec.time
+
+    def analyze(self, cfg: CacheConfig) -> PatternResult:
+        self.pattern = classify(list(self.records), self.total, cfg)
+        self.last_analyzed_at = self.accesses
+        if self.pattern.pattern is Pattern.RANDOM:
+            self.ttl = fit_adaptive_ttl(list(self.times), cfg)
+        return self.pattern
+
+    def maybe_analyze(self, cfg: CacheConfig) -> Optional[PatternResult]:
+        if not self.non_trivial(cfg):
+            return None
+        if (self.pattern.pattern is Pattern.UNKNOWN
+                or self.accesses - self.last_analyzed_at >= cfg.reanalyze_every):
+            return self.analyze(cfg)
+        return None
+
+    def hot_children(self, f_p: float) -> List[str]:
+        """Children whose in-window access frequency f = x/n >= f_p (§3.3)."""
+        n = len(self.records)
+        if n == 0:
+            return []
+        return [k for k, x in self.child_hits.items() if x / n >= f_p]
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"AccessStream({'/'.join(self.path) or '<root>'}, "
+                f"acc={self.accesses}, pat={self.pattern.pattern.value})")
+
+
+class AccessStreamTree:
+    """The tree + global node accounting (§3.1, §4)."""
+
+    def __init__(self, cfg: Optional[CacheConfig] = None) -> None:
+        self.cfg = cfg or CacheConfig()
+        self.root = AccessStream("", (), None, self.cfg.window)
+        # LRU over all non-root nodes for the hard node cap.
+        self._lru: "OrderedDict[PathT, AccessStream]" = OrderedDict()
+
+    # -- observation ---------------------------------------------------------
+    def observe(self, levels: Iterable[Tuple[str, int, int]], time: float,
+                size: int = 0) -> List[AccessStream]:
+        """Insert one leaf access.
+
+        ``levels`` is the root-to-leaf decomposition of the access:
+        ``(child_key, child_index, level_total)`` per level — e.g. for
+        ``ImageNet/train/n014/4716.JPEG`` block 0:
+        ``[("ImageNet", 3, 10), ("train", 0, 1), ("n014", 17, 1000),
+        ("4716.JPEG", 561, 1300), ("#0", 0, 1)]``.
+
+        Layer compression (§4), generalized: a level with a single-entry
+        listing (total <= 1) carries no pattern information, so it is not
+        recorded; nodes are only materialized down to the deepest level that
+        still has informative structure below it.  A 1-block file in a flat
+        directory therefore costs ZERO nodes beyond its parent directory —
+        the directory node's observation window carries the file-level
+        pattern.
+
+        Returns the list of nodes (root-side first) that recorded the access.
+        """
+        levels = list(levels)
+        # deepest level with an informative (>1 entry) listing
+        last_informative = -1
+        for d, (_, _, total) in enumerate(levels):
+            if total > 1:
+                last_informative = d
+        node = self.root
+        touched: List[AccessStream] = []
+        for d, (child_key, index, total) in enumerate(levels):
+            if total > 1:
+                node.total = max(node.total, total)
+                node.record(AccessRecord(index=index, total=total, time=time,
+                                         child_key=child_key, size=size))
+                node.maybe_analyze(self.cfg)
+                touched.append(node)
+            else:
+                node.last_access_time = time
+            if d >= last_informative:
+                break  # nothing informative below — stop materializing
+            child = node.children.get(child_key)
+            if child is None:
+                child = AccessStream(child_key, node.path + (child_key,), node,
+                                     self.cfg.window)
+                node.children[child_key] = child
+                self._lru[child.path] = child
+                self._prune_children(node)
+                self._enforce_node_cap()
+            else:
+                node.children.move_to_end(child_key)
+                self._lru.move_to_end(child.path)
+            node = child
+        node.last_access_time = time
+        return touched
+
+    # -- overhead control ----------------------------------------------------
+    def _prune_children(self, node: AccessStream) -> None:
+        """Child pruning (§4): bound children of a non-trivial node."""
+        limit = self.cfg.window
+        while len(node.children) > limit:
+            old_key, old_child = node.children.popitem(last=False)
+            self._detach_subtree(old_child)
+
+    def _detach_subtree(self, node: AccessStream) -> None:
+        self._lru.pop(node.path, None)
+        for child in node.children.values():
+            self._detach_subtree(child)
+        node.children.clear()
+        node.parent = None
+
+    def _enforce_node_cap(self) -> None:
+        while len(self._lru) > self.cfg.node_cap:
+            victim = None
+            for path, node in self._lru.items():
+                if not node.children:  # only detach leaves of the tree
+                    victim = node
+                    break
+            if victim is None:
+                path, victim = next(iter(self._lru.items()))
+            self._lru.pop(victim.path, None)
+            if victim.parent is not None:
+                victim.parent.children.pop(victim.key, None)
+                victim.parent = None
+
+    # -- queries --------------------------------------------------------------
+    def node_count(self) -> int:
+        return len(self._lru)
+
+    def find(self, path: PathT) -> Optional[AccessStream]:
+        node = self.root
+        for comp in path:
+            node = node.children.get(comp)
+            if node is None:
+                return None
+        return node
+
+    def iter_nodes(self):
+        yield from self._lru.values()
+
+    def shallowest_non_trivial(self, path: PathT) -> Optional[AccessStream]:
+        """First non-trivial node on the root→path walk (the CMU anchor)."""
+        node = self.root
+        for comp in path:
+            child = node.children.get(comp)
+            if child is None:
+                break
+            if child.non_trivial(self.cfg):
+                return child
+            node = child
+        return None
+
+    def deepest_informative(self, path: PathT) -> Optional[AccessStream]:
+        """Deepest non-trivial node with a classified pattern along the path.
+
+        This is the level whose pattern governs policy for accesses under it
+        (e.g. block level inside a large file, file level inside a dataset
+        directory) — 'depending on where a non-trivial data access pattern
+        exists' (§3.3).
+        """
+        node = self.root
+        best: Optional[AccessStream] = None
+        for comp in path:
+            child = node.children.get(comp)
+            if child is None:
+                break
+            if (child.non_trivial(self.cfg)
+                    and child.pattern.pattern is not Pattern.UNKNOWN):
+                best = child
+            node = child
+        return best

@@ -1,0 +1,450 @@
+"""The IGTCache engine (§3, §4): observe → recognize → adapt.
+
+One object drives the full read path:
+
+    outcome = engine.read(file_path, offset, size, now)
+
+``outcome`` reports, per 4 MB block, whether it was served from cache, and
+carries the prefetch candidates the engine wants fetched in the background.
+The *caller* (discrete-event simulator, or the training-input pipeline) owns
+time and bandwidth: it fetches misses/prefetches and calls
+``complete_prefetch`` when background bytes land.  This keeps the engine a
+pure, deterministic state machine — the property-test surface.
+
+Baselines (§5) are the same engine with adaptivity switched off via
+``EngineOptions`` — e.g. JuiceFS ≈ enhanced-stride readahead + one global LRU
+pool + fixed TTL; see ``baselines.py`` for the named bundles.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .access_stream_tree import AccessStream, AccessStreamTree
+from .allocation import FluidAllocator, QuiverAllocator, Rebalancer
+from .cache import (CacheManageUnit, SubStream, UnifiedCache, block_key)
+from .eviction import EagerEviction
+from .meta import StoreMeta
+from .prefetch import (block_sequential_candidates, sequential_candidates,
+                       statistical_candidates)
+from .types import CacheConfig, CacheStats, PathT, Pattern
+
+
+@dataclass
+class EngineOptions:
+    """Feature switches; defaults = full IGTCache."""
+
+    prefetch: str = "adaptive"     # adaptive|stride|enhanced_stride|sfp|none
+    eviction: str = "adaptive"     # adaptive|lru|fifo|lfu|arc|sieve|uniform
+    allocation: str = "adaptive"   # adaptive|shared|quiver|fluid|static
+    static_fraction: float = 0.5   # for allocation == "static"
+    fixed_ttl: Optional[float] = None
+    name: str = "igtcache"
+
+
+@dataclass
+class BlockResult:
+    key: str
+    size: int
+    hit: bool
+    prefetched_hit: bool = False
+
+
+@dataclass
+class ReadOutcome:
+    blocks: List[BlockResult] = field(default_factory=list)
+    prefetches: List[Tuple[PathT, int]] = field(default_factory=list)
+
+    @property
+    def remote_bytes(self) -> int:
+        return sum(b.size for b in self.blocks if not b.hit)
+
+    @property
+    def cached_bytes(self) -> int:
+        return sum(b.size for b in self.blocks if b.hit)
+
+
+class IGTCache:
+    def __init__(self, meta: StoreMeta, capacity: int,
+                 cfg: Optional[CacheConfig] = None,
+                 options: Optional[EngineOptions] = None) -> None:
+        self.meta = meta
+        self.cfg = cfg or CacheConfig()
+        self.options = options or EngineOptions()
+        self.tree = AccessStreamTree(self.cfg)
+        self.cache = UnifiedCache(capacity, self.cfg)
+        self.stats = self.cache.stats
+        self.rebalancer = Rebalancer(self.cfg)
+        self.quiver = QuiverAllocator(self.cfg)
+        self.fluid = FluidAllocator(self.cfg)
+        # prefetch bookkeeping
+        self._pending_prefetch: set = set()
+        self._prefetched_resident: set = set()
+        self._node_last_prefetch_idx: Dict[PathT, int] = {}
+        self._ra_depth: Dict[PathT, int] = {}
+        # stride/enhanced-stride readahead state per file
+        self._stride_state: Dict[PathT, Tuple[int, int, int]] = {}
+        # SFP: file-level first-order Markov transitions per dataset
+        self._sfp_prev: Dict[str, PathT] = {}
+        self._sfp_trans: Dict[PathT, Dict[PathT, int]] = defaultdict(dict)
+        self._last_ttl_sweep = 0.0
+        # explicit user instructions (§3.3 footnote 8): path prefixes the
+        # user pinned (never evict / never TTL) or banned (never cache)
+        self._pinned: set = set()
+        self._never_cache: set = set()
+
+    # -------------------------------------------------------- user controls
+    def pin(self, path: PathT) -> None:
+        """Persistently cache everything under ``path`` (user override):
+        exempt from TTL expiry and from allocation donation below its use."""
+        self._pinned.add(path)
+
+    def never_cache(self, path: PathT) -> None:
+        """Never admit blocks under ``path`` (reads pass through)."""
+        self._never_cache.add(path)
+
+    def _prefix_in(self, path: PathT, table: set) -> bool:
+        return any(path[:len(p)] == p for p in table)
+
+    # ------------------------------------------------------------------ read
+    def read(self, file_path: PathT, offset: int, size: int,
+             now: float) -> ReadOutcome:
+        out = ReadOutcome()
+        fsize = self.meta.file_size(file_path)
+        size = max(0, min(size, fsize - offset))
+        if size == 0:
+            return out
+        bs = self.cfg.block_size
+        first, last = offset // bs, (offset + size - 1) // bs
+        for b in range(first, last + 1):
+            bsize = min(bs, fsize - b * bs)
+            self._read_block(file_path, b, bsize, now, out)
+        if self.options.prefetch == "sfp":
+            self._sfp_observe(file_path, out, now)
+        return out
+
+    def _read_block(self, file_path: PathT, b: int, bsize: int, now: float,
+                    out: ReadOutcome) -> None:
+        leaf_path = file_path + (f"#{b}",)
+        key = block_key(leaf_path)
+        levels = self._resolve_levels(file_path, b)
+        self.tree.observe(levels, now, bsize)
+
+        cmu, sub, governing = self._route(file_path, leaf_path, now, b)
+        cmu.note_access(now, bsize)
+        if governing is not None and governing.ttl is not None:
+            cmu.ttl = governing.ttl
+        if self.options.fixed_ttl is not None:
+            cmu.ttl = self.options.fixed_ttl
+
+        hit = self.cache.resident(key)
+        if hit:
+            self.stats.hits += 1
+            cmu.hits += 1
+            self.stats.bytes_from_cache += bsize
+            pf_hit = key in self._prefetched_resident
+            if pf_hit:
+                self._prefetched_resident.discard(key)
+                self.stats.prefetch_hits += 1
+            cmu.on_hit(key)
+            cmu.after_read(key)  # eager eviction for sequential streams
+            out.blocks.append(BlockResult(key, bsize, True, pf_hit))
+        else:
+            self.stats.misses += 1
+            cmu.misses += 1
+            self.stats.bytes_from_remote += bsize
+            cmu.on_miss(key, sub)
+            # Eager (sequential) streams read demand misses *through* the
+            # cache: the block is consumed on arrival, so admitting it would
+            # only evict a useful readahead block (§3.3 eager eviction).
+            banned = self._prefix_in(file_path, self._never_cache)
+            if not banned and not isinstance(sub.policy, EagerEviction):
+                self.cache.insert(leaf_path, bsize, cmu, sub)
+            out.blocks.append(BlockResult(key, bsize, False))
+
+        out.prefetches.extend(self._gen_prefetch(file_path, leaf_path, cmu,
+                                                 governing, now))
+        self.tick(now)
+
+    # ------------------------------------------------------- path resolution
+    def _resolve_levels(self, file_path: PathT, b: int):
+        """Root-to-leaf (key, index, parent-listing-size); the tree applies
+        layer compression internally (degenerate levels record nothing)."""
+        levels: List[Tuple[str, int, int]] = []
+        for depth in range(len(file_path)):
+            parent = file_path[:depth]
+            name = file_path[depth]
+            total = self.meta.listing_size(parent)
+            idx = self.meta.child_index(parent, name)
+            levels.append((name, idx, total))
+        fsize = self.meta.file_size(file_path)
+        nblocks = max(1, -(-fsize // self.cfg.block_size))
+        levels.append((f"#{b}", b, nblocks))
+        return levels
+
+    def _route(self, file_path: PathT, leaf_path: PathT, now: float,
+               block: int):
+        """Map an access to (CMU, SubStream, governing pattern node).
+
+        Policy pattern precedence: the CMU's flattened dataset-granularity
+        classification (when its window is full) overrides the per-level
+        node pattern for RANDOM/SKEWED decisions — skew spread across few
+        large files is only visible in the flat index space.  SEQUENTIAL
+        detections at any level are kept (they carry the prefetch structure).
+        """
+        isolating = self.options.allocation != "shared"
+        governing = self.tree.deepest_informative(leaf_path)
+        if isolating:
+            anchor = self.tree.shallowest_non_trivial(file_path)
+            if anchor is not None and anchor.path not in self.cache.cmus:
+                cmu = self.cache.create_cmu(
+                    anchor.path, self.meta.subtree_bytes(anchor.path), now)
+                if self.options.allocation == "static":
+                    want = int(self.options.static_fraction *
+                               max(1, cmu.dataset_bytes))
+                    self._set_static_quota(cmu, want)
+                elif self.options.allocation == "adaptive":
+                    # late arrivals get their minimum share immediately
+                    self.rebalancer.seed(cmu, list(self.cache.cmus.values()))
+        cmu = self.cache.cmu_for_path(leaf_path)
+        flat = Pattern.UNKNOWN
+        if cmu is not self.cache.default_cmu:
+            # flat dataset-granularity view (meaningless for the default CMU,
+            # which mixes unrelated datasets)
+            ordinal, total = self.meta.flat_block_index(file_path, block)
+            flat = cmu.note_flat(ordinal, total, now)
+        pattern = Pattern.UNKNOWN
+        gpath = cmu.root_path
+        if governing is not None:
+            pattern = governing.pattern.pattern
+            gpath = governing.path
+        if flat is not Pattern.UNKNOWN and pattern is not Pattern.SEQUENTIAL:
+            pattern = flat
+            gpath = cmu.root_path
+        if self.options.eviction != "adaptive":
+            sub = self._fixed_substream(cmu)
+        else:
+            sub = cmu.substream(gpath, pattern)
+        return cmu, sub, governing
+
+    def _fixed_substream(self, cmu: CacheManageUnit) -> SubStream:
+        from .eviction import make_policy
+        sub = cmu.substreams.get(cmu.root_path)
+        if sub is None or getattr(sub.policy, "name", "") != self.options.eviction:
+            cap_blocks = max(1, cmu.quota // self.cfg.block_size)
+            policy = make_policy(self.options.eviction, cap_blocks)
+            if sub is not None:
+                for k in sub.blocks:
+                    policy.record_insert(k)
+                sub.policy = policy
+            else:
+                sub = SubStream(cmu.root_path, Pattern.UNKNOWN, policy)
+                cmu.substreams[cmu.root_path] = sub
+        return sub
+
+    def _set_static_quota(self, cmu: CacheManageUnit, want: int) -> None:
+        default = self.cache.default_cmu
+        extra = want - cmu.quota
+        if extra > 0:
+            take = min(extra, max(0, default.quota - self.cfg.min_share))
+            default.set_quota(default.quota - take)
+            cmu.set_quota(cmu.quota + take)
+
+    # ------------------------------------------------------------- prefetch
+    def _gen_prefetch(self, file_path: PathT, leaf_path: PathT,
+                      cmu: CacheManageUnit, governing: Optional[AccessStream],
+                      now: float) -> List[Tuple[PathT, int]]:
+        mode = self.options.prefetch
+        if mode == "none" or self.cache.capacity <= 0:
+            return []
+        if mode in ("stride", "enhanced_stride"):
+            return self._stride_prefetch(file_path, leaf_path,
+                                         enhanced=(mode == "enhanced_stride"))
+        if mode == "sfp":
+            return []  # handled at file switch in read()
+        # -------- adaptive (IGTCache §3.3) --------
+        cands: List[Tuple[PathT, int]] = []
+        # Readahead horizon: bounded by the stream's quota (admission will
+        # evict consumed/stale blocks as needed) and the global horizon cap.
+        budget = min(cmu.quota, self.cfg.prefetch_budget_bytes)
+        # sequential levels: hierarchical prefetch at every sequential node
+        node = self.tree.root
+        for comp in leaf_path:
+            child = node.children.get(comp)
+            if child is None:
+                break
+            if (child.non_trivial(self.cfg)
+                    and child.pattern.pattern is Pattern.SEQUENTIAL
+                    and child.records):
+                idx = child.records[-1].index
+                if self._node_last_prefetch_idx.get(child.path) != idx:
+                    self._node_last_prefetch_idx[child.path] = idx
+                    # Adaptive depth: double while the stream keeps advancing
+                    # (fast consumers outrun a fixed N=4 window).
+                    depth = self._ra_depth.get(child.path,
+                                               self.cfg.prefetch_depth)
+                    if self.meta.is_file(child.path):
+                        got = block_sequential_candidates(
+                            self.meta, child, self.cfg, budget, depth=depth)
+                    else:
+                        got = sequential_candidates(
+                            self.meta, child, self.cfg, budget, depth=depth)
+                    if got:
+                        self._ra_depth[child.path] = min(
+                            depth * 2, self.cfg.max_readahead_items)
+                    cands.extend(got)
+            node = child
+        # random: statistical whole-dataset prefetch, once per (re)classify
+        if (cmu.effective_pattern() is Pattern.RANDOM
+                and not cmu.stat_prefetch_done):
+            cmu.stat_prefetch_done = True
+            cands.extend(statistical_candidates(
+                self.meta, cmu.root_path, cmu.quota, cmu.dataset_bytes,
+                self.cfg, lambda p: self.cache.resident(block_key(p))))
+        return self._dedup_prefetch(cands)
+
+    def _stride_prefetch(self, file_path: PathT, leaf_path: PathT,
+                         enhanced: bool) -> List[Tuple[PathT, int]]:
+        """JuiceFS-style block readahead within one file."""
+        b = int(leaf_path[-1][1:])
+        last, run, depth = self._stride_state.get(file_path, (-2, 0, 4))
+        if b == last + 1:
+            run += 1
+            if enhanced and run % 4 == 0:
+                depth = min(32, depth * 2)
+        else:
+            run, depth = 0, 4
+        self._stride_state[file_path] = (b, run, depth)
+        if run < 3:
+            return []
+        fsize = self.meta.file_size(file_path)
+        nblocks = max(1, -(-fsize // self.cfg.block_size))
+        cands = []
+        for nb in range(b + 1, min(nblocks, b + 1 + depth)):
+            bsize = min(self.cfg.block_size, fsize - nb * self.cfg.block_size)
+            cands.append((file_path + (f"#{nb}",), bsize))
+        return self._dedup_prefetch(cands)
+
+    def _sfp_observe(self, file_path: PathT, out: ReadOutcome,
+                     now: float) -> List[Tuple[PathT, int]]:
+        """SFP [76]-style file-level Markov prefetch (baseline)."""
+        ds = file_path[0] if file_path else ""
+        prev = self._sfp_prev.get(ds)
+        cands: List[Tuple[PathT, int]] = []
+        if prev is not None and prev != file_path:
+            t = self._sfp_trans[prev]
+            t[file_path] = t.get(file_path, 0) + 1
+            succ = self._sfp_trans.get(file_path)
+            if succ:
+                best, cnt = max(succ.items(), key=lambda kv: kv[1])
+                total = sum(succ.values())
+                if cnt >= 2 and cnt / total >= 0.5:
+                    fsize = self.meta.file_size(best)
+                    nblocks = max(1, -(-fsize // self.cfg.block_size))
+                    for nb in range(min(nblocks, 8)):
+                        bsize = min(self.cfg.block_size,
+                                    fsize - nb * self.cfg.block_size)
+                        cands.append((best + (f"#{nb}",), bsize))
+        self._sfp_prev[ds] = file_path
+        got = self._dedup_prefetch(cands)
+        out.prefetches.extend(got)
+        return got
+
+    def _dedup_prefetch(self, cands: List[Tuple[PathT, int]]):
+        out = []
+        for path, size in cands:
+            key = block_key(path)
+            if key in self._pending_prefetch or self.cache.resident(key):
+                continue
+            self._pending_prefetch.add(key)
+            self.stats.prefetch_issued += 1
+            out.append((path, size))
+        return out
+
+    def complete_prefetch(self, path: PathT, size: int, now: float) -> bool:
+        """Background fetch landed — admit without polluting the tree."""
+        key = block_key(path)
+        self._pending_prefetch.discard(key)
+        if self.cache.resident(key):
+            return True
+        file_path = path[:-1] if path[-1].startswith("#") else path
+        cmu = self.cache.cmu_for_path(path)
+        governing = self.tree.deepest_informative(path)
+        pattern = governing.pattern.pattern if governing else Pattern.UNKNOWN
+        gpath = governing.path if governing else cmu.root_path
+        if self.options.eviction != "adaptive":
+            sub = self._fixed_substream(cmu)
+        else:
+            sub = cmu.substream(gpath, pattern)
+        ok = self.cache.insert(path, size, cmu, sub)
+        if ok:
+            self._prefetched_resident.add(key)
+        else:
+            self.stats.prefetch_wasted += 1
+        return ok
+
+    def cancel_prefetch(self, path: PathT) -> None:
+        self._pending_prefetch.discard(block_key(path))
+
+    # ------------------------------------------------------------------ tick
+    def tick(self, now: float) -> None:
+        # TTL sweep (rate-limited).  Eviction exists to free space for other
+        # active workloads (§3.3) — so it only fires under cache pressure.
+        if now - self._last_ttl_sweep >= 5.0:
+            self._last_ttl_sweep = now
+            pressure = self.cache.used_bytes() > 0.85 * self.cache.capacity
+            for path, cmu in list(self.cache.cmus.items()):
+                if cmu is self.cache.default_cmu:
+                    continue
+                if self._prefix_in(path, self._pinned):
+                    continue  # user-pinned: exempt from TTL expiry
+                ttl = (self.options.fixed_ttl if self.options.fixed_ttl
+                       is not None else cmu.effective_ttl())
+                if ttl is None:
+                    continue
+                idle_since = max(cmu.last_access_time, cmu.created_at)
+                if pressure and now - idle_since > ttl and cmu.used > 0:
+                    self.cache.remove_cmu(path)
+        # allocation round
+        alloc = self.options.allocation
+        cmus = [c for c in self.cache.cmus.values()]
+        workload_cmus = [c for c in cmus if c is not self.cache.default_cmu]
+        if alloc == "adaptive" and self.rebalancer.due(now):
+            self.rebalancer.rebalance(cmus, now)
+        elif alloc == "quiver" and self.quiver.due(now):
+            self.quiver.rebalance(workload_cmus, now, self._workload_capacity())
+            self._give_rest_to_default()
+        elif alloc == "fluid" and self.fluid.due(now):
+            self.fluid.rebalance(workload_cmus, now, self._workload_capacity())
+            self._give_rest_to_default()
+
+    def _workload_capacity(self) -> int:
+        return self.cache.capacity - self.cfg.min_share  # default keeps a floor
+
+    def _give_rest_to_default(self) -> None:
+        rest = self.cache.capacity - sum(
+            c.quota for c in self.cache.cmus.values()
+            if c is not self.cache.default_cmu)
+        self.cache.default_cmu.set_quota(max(0, rest))
+
+    # ----------------------------------------------------------------- stats
+    def hit_ratio(self) -> float:
+        return self.stats.hit_ratio
+
+    def snapshot(self) -> dict:
+        s = self.stats.snapshot()
+        s["nodes"] = self.tree.node_count()
+        s["cmus"] = len(self.cache.cmus) - 1
+        s["used_bytes"] = self.cache.used_bytes()
+        return s
+
+
+def informative_depth(levels: List[Tuple[str, int, int]]) -> int:
+    """Deepest level index with an informative (>1 entry) listing — the depth
+    to which the AccessStreamTree materializes nodes (layer compression §4)."""
+    last = -1
+    for d, (_, _, total) in enumerate(levels):
+        if total > 1:
+            last = d
+    return last

@@ -1,0 +1,48 @@
+"""Metadata protocol the cache core needs from the storage layer.
+
+The core never imports ``repro.storage`` — any object satisfying this
+protocol (the simulated S3 store, a real filesystem walker, the training-data
+shard store) can back IGTCache.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Protocol, Tuple
+
+from .types import PathT
+
+
+class StoreMeta(Protocol):
+    """Listing/geometry metadata (what a FUSE layer sees from readdir/stat)."""
+
+    def listing(self, path: PathT) -> List[str]:
+        """Ordered child names under ``path`` (traversal order — the index
+        space of §3.2)."""
+        ...
+
+    def listing_size(self, path: PathT) -> int:
+        """len(listing(path)) without materializing it."""
+        ...
+
+    def child_index(self, path: PathT, name: str) -> int:
+        """Position of ``name`` in ``listing(path)``."""
+        ...
+
+    def is_file(self, path: PathT) -> bool:
+        ...
+
+    def file_size(self, path: PathT) -> int:
+        ...
+
+    def subtree_bytes(self, path: PathT) -> int:
+        """Total bytes stored under ``path`` (dataset size for §3.3)."""
+        ...
+
+    def iter_block_keys(self, path: PathT) -> Iterator[Tuple[PathT, int]]:
+        """All (block_path, size) under ``path`` in traversal order."""
+        ...
+
+    def flat_block_index(self, file_path: PathT, block: int) -> Tuple[int, int]:
+        """(global block ordinal, total blocks) within the file's top-level
+        dataset, in traversal order — the flattened index space used for
+        dataset-granularity pattern analysis."""
+        ...

@@ -1,0 +1,135 @@
+"""Online pattern recognition for one AccessStream (§3.2) + adaptive TTL (§3.3).
+
+Decision procedure, purely from cache-side information:
+
+1. sequential — the signed spatial gaps of consecutive accesses are
+   overwhelmingly a small constant positive stride (unit stride for block
+   scans and listing-order traversals).  Existing-practice detector.
+2. otherwise run the K-S test of the |gap| samples against the triangular
+   permutation law over [1, c]:  accept → random, reject → skewed.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from .ks import ks_test_random, normal_quantile
+from .types import AccessRecord, CacheConfig, Pattern
+
+
+@dataclass
+class PatternResult:
+    pattern: Pattern
+    d_stat: float = 0.0
+    d_critical: float = 0.0
+    stride: int = 1  # detected stride when sequential
+    seq_fraction: float = 0.0
+
+
+def spatial_gaps(records: Sequence[AccessRecord]) -> list[int]:
+    return [records[i].index - records[i - 1].index for i in range(1, len(records))]
+
+
+MAX_STRIDE = 16
+
+
+def detect_sequential(gaps: Sequence[int], threshold: float) -> tuple[bool, int, float]:
+    """Return (is_sequential, stride, fraction-in-order).
+
+    A stream is sequential when consecutive accesses move monotonically
+    forward in small steps: at least ``threshold`` of the gaps lie in
+    [0, MAX_STRIDE], backwards seeks are rare (<= 1 - threshold), and there is
+    net forward drift.  Gap 0 counts as in-order — a coarse (directory) level
+    sees long runs of 0 while a child is being traversed, punctuated by +1 on
+    child switches.  Random streams fail on the backwards-seek test
+    (~half their gaps are negative); skewed streams fail on both.
+    """
+    if not gaps:
+        return False, 1, 0.0
+    n = len(gaps)
+    in_order = sum(1 for g in gaps if 0 <= g <= MAX_STRIDE) / n
+    backwards = sum(1 for g in gaps if g < 0) / n
+    drift = sum(gaps)
+    pos = [g for g in gaps if 0 < g <= MAX_STRIDE]
+    counts: dict[int, int] = {}
+    for g in pos:
+        counts[g] = counts.get(g, 0) + 1
+    stride = max(counts.items(), key=lambda kv: kv[1])[0] if counts else 1
+    is_seq = in_order >= threshold and backwards <= (1.0 - threshold) and drift > 0
+    return is_seq, stride, in_order
+
+
+def distinct_deficit(indices: Sequence[int], c: int) -> float:
+    """z-score of the distinct-count against the uniform null.
+
+    Under uniform(-with-replacement) sampling of w items from [1, c]:
+        E[D]   = c (1 - (1-1/c)^w)
+        Var[D] = c (1-1/c)^w + c(c-1)(1-2/c)^w - c^2 (1-1/c)^{2w}
+    Permutation epochs (the random pattern) give >= E[D] distinct items; a
+    frequency-skewed stream revisits hot items and lands far BELOW.  Returns
+    (E[D] - observed) / sd — large positive = skew.  This screen catches hot
+    sets that are scattered in index space, which the spatial-gap K-S test is
+    blind to (the skew is in access *frequency*, not position).
+    """
+    w = len(indices)
+    if w < 4 or c < 4:
+        return 0.0
+    d_obs = len(set(indices))
+    p1 = (1.0 - 1.0 / c) ** w
+    p2 = (1.0 - 2.0 / c) ** w
+    e_d = c * (1.0 - p1)
+    var = c * p1 + c * (c - 1) * p2 - c * c * p1 * p1
+    sd = math.sqrt(max(var, 1e-9))
+    return (e_d - d_obs) / max(sd, 1.0)
+
+
+def classify(records: Sequence[AccessRecord], total: int, cfg: CacheConfig) -> PatternResult:
+    """Classify one observation window of accesses (§3.2).
+
+    Order: sequential gap screen → distinct-count z-test (frequency skew) →
+    K-S against the triangular permutation law (positional randomness).
+    """
+    if len(records) < 2:
+        return PatternResult(Pattern.UNKNOWN)
+    gaps = spatial_gaps(records)
+
+    is_seq, stride, frac = detect_sequential(gaps, cfg.sequential_threshold)
+    if is_seq:
+        return PatternResult(Pattern.SEQUENTIAL, stride=stride, seq_fraction=frac)
+
+    c = max(total, max(r.index for r in records) + 1)
+    # Degenerate index space (single-item listing / one hot child): nothing to
+    # infer at this level — defer to an ancestor/descendant stream.
+    if c <= 2 or len({r.index for r in records}) <= 1:
+        return PatternResult(Pattern.UNKNOWN)
+
+    z = distinct_deficit([r.index for r in records], c)
+    if z > cfg.distinct_z_threshold:
+        return PatternResult(Pattern.SKEWED)
+    abs_gaps = [abs(g) for g in gaps]
+    accept, d, d_alpha = ks_test_random(abs_gaps, c, cfg.alpha)
+    pattern = Pattern.RANDOM if accept else Pattern.SKEWED
+    return PatternResult(pattern, d_stat=d, d_critical=d_alpha, seq_fraction=frac)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive TTL (§3.3): temporal gaps ~ Normal(mu, sigma); TTL is the
+# (1 - significance) quantile plus a base time guarding against small
+# disturbances.  A stream idle longer than its TTL is presumed finished and
+# its resident data is evicted wholesale.
+# ---------------------------------------------------------------------------
+
+def fit_adaptive_ttl(times: Sequence[float], cfg: CacheConfig) -> Optional[float]:
+    """Fit TTL from the access timestamps of one observation window."""
+    if len(times) < 3:
+        return None
+    gaps = [times[i] - times[i - 1] for i in range(1, len(times)) if times[i] >= times[i - 1]]
+    if len(gaps) < 2:
+        return None
+    n = len(gaps)
+    mu = sum(gaps) / n
+    var = sum((g - mu) ** 2 for g in gaps) / max(1, n - 1)
+    sigma = math.sqrt(var)
+    z = normal_quantile(1.0 - cfg.ttl_significance)
+    return mu + z * sigma + cfg.ttl_base

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three layers: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (dispatching jit-able wrapper) and ``ref.py`` (pure-jnp oracle).
+CPU validation runs the kernels with interpret=True against the oracles
+(tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from .flash_attention import decode_attention, flash_attention
+from .rmsnorm import gated_rmsnorm, rmsnorm
+from .ssd import ssd, ssd_decode
+
+__all__ = ["decode_attention", "flash_attention", "gated_rmsnorm", "rmsnorm",
+           "ssd", "ssd_decode"]

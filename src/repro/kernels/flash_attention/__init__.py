@@ -1,0 +1,6 @@
+from .ops import decode_attention, flash_attention
+from .kernel import flash_attention_pallas
+from .ref import decode_attention_ref, flash_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_ref", "flash_attention",
+           "flash_attention_pallas", "flash_attention_ref"]

@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for blockwise causal (flash) attention with GQA.
+
+Exact online-softmax over KV blocks — the numerical reference for the Pallas
+kernel AND the implementation lowered in CPU dry-runs (never materializes the
+S×S score matrix; HLO stays compact via ``lax.scan`` over KV blocks).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True, q_offset: int = 0,
+                        block_kv: int = 1024,
+                        softmax_scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H % KV == 0.
+
+    ``q_offset`` is the absolute position of q[0] (for chunked prefill).
+    Returns (B, Sq, H, hd) in q.dtype; accumulation in f32.
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    groups = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+
+    block_kv = min(block_kv, Skv)
+    if Skv % block_kv != 0:  # pad KV to a block multiple (masked out)
+        pad = block_kv - Skv % block_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = Skv
+        Skv = Skv + pad
+    else:
+        kv_valid = Skv
+    nb = Skv // block_kv
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # (B,H,Sq,hd)
+    kb = k.astype(jnp.float32).reshape(B, nb, block_kv, KV, hd)
+    vb = v.astype(jnp.float32).reshape(B, nb, block_kv, KV, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        o, m, l = carry
+        kblk, vblk, j = blk                      # (B, block_kv, KV, hd), j
+        # GQA: expand kv heads to H lazily via reshape of q side
+        qg = qf.reshape(B, KV, groups, Sq, hd)
+        s = jnp.einsum("bkgqd,bckd->bkgqc", qg, kblk)
+        k_pos = j * block_kv + jnp.arange(block_kv)
+        mask = k_pos[None, :] < kv_valid
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vblk)
+        o_new = o * alpha[..., None] + pv
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, KV, groups, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, KV, groups, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, groups, Sq), jnp.float32)
+    (o, m, l), _ = lax.scan(
+        body, (o0, m0, l0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nb)))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array | int,
+                         softmax_scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode attention over a (possibly padded) KV cache.
+
+    q: (B, 1, H, hd); k, v: (B, S_max, KV, hd); ``kv_len`` = valid prefix
+    length (scalar or (B,)).  Memory-bound: one pass, no blocking needed.
+    """
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    groups = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KV, groups, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = (pos[None, :] < jnp.asarray(kv_len).reshape(-1, 1)) if jnp.ndim(
+        jnp.asarray(kv_len)) else (pos < kv_len)[None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

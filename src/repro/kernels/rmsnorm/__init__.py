@@ -1,0 +1,6 @@
+from .ops import gated_rmsnorm, rmsnorm
+from .kernel import rmsnorm_pallas
+from .ref import gated_rmsnorm_ref, rmsnorm_ref
+
+__all__ = ["gated_rmsnorm", "gated_rmsnorm_ref", "rmsnorm", "rmsnorm_pallas",
+           "rmsnorm_ref"]

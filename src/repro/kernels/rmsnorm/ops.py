@@ -1,0 +1,16 @@
+from __future__ import annotations
+
+import jax
+
+from .kernel import rmsnorm_pallas
+from .ref import gated_rmsnorm_ref, rmsnorm_ref
+
+
+def rmsnorm(x, weight, eps: float = 1e-5, force_ref: bool = False):
+    if jax.default_backend() == "tpu" and not force_ref:
+        return rmsnorm_pallas(x, weight, eps=eps)
+    return rmsnorm_ref(x, weight, eps=eps)
+
+
+def gated_rmsnorm(x, gate, weight, eps: float = 1e-5):
+    return gated_rmsnorm_ref(x, gate, weight, eps=eps)

@@ -1,0 +1,21 @@
+"""Pure-jnp RMSNorm oracle (f32 accumulation, bf16 in/out)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rmsnorm_ref(x, gate, weight, eps: float = 1e-5):
+    """Mamba2's out-norm: rmsnorm(x * silu(gate)) variant (norm-then-gate)."""
+    xf = x.astype(jnp.float32)
+    g = gate.astype(jnp.float32)
+    xf = xf * (g * jnp.reciprocal(1.0 + jnp.exp(-g)))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,6 @@
+from .ops import ssd, ssd_decode
+from .kernel import ssd_chunk_pallas
+from .ref import segsum, ssd_decode_ref, ssd_ref
+
+__all__ = ["segsum", "ssd", "ssd_chunk_pallas", "ssd_decode",
+           "ssd_decode_ref", "ssd_ref"]

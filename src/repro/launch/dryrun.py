@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the process entry (the XLA_FLAGS line above runs before any jax
+import).  For each cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis → results JSON
+
+Results append incrementally to --out (resumable); §Dry-run/§Roofline of
+EXPERIMENTS.md are generated from that file.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import CONFIGS, SHAPES, get_config
+from ..roofline.analysis import analyze, parse_collectives
+from .mesh import make_production_mesh
+
+DEFAULT_OUT = Path("dryrun_results.json")
+
+
+def mesh_for(name: str):
+    if name == "single":
+        return make_production_mesh(multi_pod=False)
+    if name == "multi":
+        return make_production_mesh(multi_pod=True)
+    raise ValueError(name)
+
+
+def rules_for(arch: str, shape_name: str, variant: str = "baseline"):
+    """Per-cell sharding rules.  ``variant`` may be '+'-composed, e.g.
+    'pure_fsdp+chunked_loss'; 'chunked_loss' toggles the CE impl instead of
+    the rules (handled by the caller)."""
+    from ..sharding import DEFAULT_RULES
+    rules = dict(DEFAULT_RULES)
+    if shape_name == "long_500k":
+        # batch=1: sequence-shard the cache over the data axis
+        rules["cache_seq"] = "data"
+        rules["cache_batch"] = None
+    for v in variant.split("+"):
+        if v in ("baseline", "chunked_loss") or v.startswith("micro"):
+            continue
+        from .variants import apply_variant
+        rules = apply_variant(rules, arch, shape_name, v)
+    return rules
+
+
+def loss_for(variant: str) -> str:
+    return "chunked" if "chunked_loss" in variant.split("+") else "dense"
+
+
+def micro_for(variant: str) -> int:
+    for v in variant.split("+"):
+        if v.startswith("micro"):
+            return int(v[5:])
+    return 1
+
+
+def _lower(cfg, shape, mesh, rules, remat, unroll=1, loss_impl="dense",
+           microbatches=1):
+    if shape.kind == "train":
+        from ..train.train_step import lower_train_step
+        return lower_train_step(cfg, shape, mesh, rules, remat=remat,
+                                unroll=unroll, loss_impl=loss_impl,
+                                microbatches=microbatches)
+    if shape.kind == "prefill":
+        from ..serve.serve_step import lower_prefill
+        return lower_prefill(cfg, shape, mesh, rules, unroll=unroll)
+    from ..serve.serve_step import lower_serve_step
+    return lower_serve_step(cfg, shape, mesh, rules, unroll=unroll)
+
+
+def _compile_cost(cfg, shape, mesh, rules, remat, loss_impl="dense",
+                  microbatches=1):
+    """(flops, bytes, collective-bytes, collective-counts) of one compile.
+    The scan is fully UNROLLED here so XLA's cost analysis counts every
+    layer (it counts a while body once)."""
+    compiled = _lower(cfg, shape, mesh, rules, remat,
+                      unroll=cfg.n_layers, loss_impl=loss_impl,
+                      microbatches=microbatches).compile()
+    cost = dict(compiled.cost_analysis() or {})
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text())
+    return flops, nbytes, coll.total_bytes, coll.counts, coll.bytes_by_kind
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             variant: str = "baseline", remat: str = "full"):
+    """One dry-run cell.
+
+    XLA's cost analysis counts a `while` (scan) body ONCE regardless of trip
+    count, so per-layer costs are recovered by compiling two shallow
+    variants (L = p and L = 2p, p = the cross/shared-block period) and
+    extrapolating linearly in depth; the full-depth compile then provides
+    the proof-of-compile, the memory analysis and the true parameter/cache
+    footprints.
+    """
+    import dataclasses
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "full-attention arch skips long_500k (DESIGN.md)"}
+    mesh = mesh_for(mesh_name)
+    chips = mesh.devices.size
+    rules = rules_for(arch, shape_name, variant)
+    loss_impl = loss_for(variant)
+    micro = micro_for(variant)
+    t0 = time.time()
+    try:
+        with mesh:
+            # --- per-layer cost via depth extrapolation -------------------
+            p = max(1, cfg.cross_attn_every or 0, cfg.shared_attn_every or 0)
+            l1, l2 = p, 2 * p
+            c1 = _compile_cost(dataclasses.replace(cfg, n_layers=l1),
+                               shape, mesh, rules, remat, loss_impl, micro)
+            c2 = _compile_cost(dataclasses.replace(cfg, n_layers=l2),
+                               shape, mesh, rules, remat, loss_impl, micro)
+            L = cfg.n_layers
+            scale = (L - l1) / max(1, (l2 - l1))
+            # clamp: cost must be monotone in depth (guards fusion noise)
+            flops = max(c1[0], c1[0] + (c2[0] - c1[0]) * scale)
+            nbytes = max(c1[1], c1[1] + (c2[1] - c1[1]) * scale)
+            coll_bytes = max(c1[2], c1[2] + (c2[2] - c1[2]) * scale)
+            coll_counts = {
+                k: int(c1[3].get(k, 0)
+                       + (c2[3].get(k, 0) - c1[3].get(k, 0)) * scale)
+                for k in set(c1[3]) | set(c2[3])}
+            coll_by_kind = {
+                k: c1[4].get(k, 0) + (c2[4].get(k, 0) - c1[4].get(k, 0)) * scale
+                for k in set(c1[4]) | set(c2[4])}
+            # --- full-depth proof compile + memory ------------------------
+            lowered = _lower(cfg, shape, mesh, rules, remat,
+                             loss_impl=loss_impl, microbatches=micro)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+        mem_stats = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_stats[attr] = int(v)
+            live = (mem_stats.get("argument_size_in_bytes", 0)
+                    + mem_stats.get("temp_size_in_bytes", 0)
+                    + mem_stats.get("output_size_in_bytes", 0)
+                    - mem_stats.get("alias_size_in_bytes", 0))
+            mem_stats["bytes_per_device"] = live
+        roof = analyze(arch, shape, mesh_name, chips,
+                       {"flops": flops, "bytes accessed": nbytes},
+                       "", cfg, mem_stats)
+        roof.collective_gbytes = coll_bytes / 1e9
+        roof.collective_s = coll_bytes / 50e9
+        roof.collectives = coll_counts
+        roof.collective_bytes_by_kind = {k: v / 1e9
+                                         for k, v in coll_by_kind.items()}
+        row = roof.row()
+        row.update({
+            "status": "ok", "variant": variant, "remat": remat,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": mem_stats,
+            "kind": shape.kind,
+            "params_b": round(cfg.param_count() / 1e9, 3),
+            "active_params_b": round(cfg.active_param_count() / 1e9, 3),
+        })
+        return row
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "variant": variant, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def load_results(path: Path):
+    if path.exists():
+        return json.loads(path.read_text())
+    return []
+
+
+def save_results(path: Path, rows):
+    path.write_text(json.dumps(rows, indent=1, default=str))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in --out")
+    args = ap.parse_args()
+
+    archs = list(CONFIGS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    rows = load_results(args.out)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+            for r in rows if r.get("status") in ("ok", "skipped")}
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                key = (arch, shape, mesh, args.variant)
+                if key in done and not args.force:
+                    continue
+                print(f"[dryrun] {arch} × {shape} × {mesh} "
+                      f"({args.variant}) ...", flush=True)
+                row = run_cell(arch, shape, mesh, args.variant, args.remat)
+                print(f"  -> {row.get('status')} "
+                      f"({row.get('compile_s', '?')}s) "
+                      f"dominant={row.get('dominant', '-')}", flush=True)
+                rows = [r for r in rows
+                        if (r["arch"], r["shape"], r["mesh"],
+                            r.get("variant", "baseline")) != key]
+                rows.append(row)
+                save_results(args.out, rows)
+    bad = [r for r in rows if r.get("status") == "error"]
+    print(f"[dryrun] {len(rows)} cells recorded, {len(bad)} errors")
+    for r in bad:
+        print("  ERROR:", r["arch"], r["shape"], r["mesh"], "-", r["error"])
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,118 @@
+"""Shared layer library: RoPE, attention block, SwiGLU MLP, embeddings.
+
+All activations keep logical sharding via ``with_sharding_constraint`` hints
+applied in the model (not here) — layers are sharding-agnostic math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import decode_attention, flash_attention, rmsnorm
+from .config import ModelConfig
+from .params import p
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    if angles.ndim == 2:
+        angles = angles[None]                           # (1, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- specs
+
+def attention_specs(cfg: ModelConfig, layers: int, prefix_axes=("layers",)):
+    """Stacked attention params for ``layers`` layers."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = (layers,)
+    la = prefix_axes
+    specs = {
+        "attn_norm": p(L + (d,), la + ("norm",), init="ones"),
+        "wq": p(L + (d, H * hd), la + ("embed", "heads")),
+        "wk": p(L + (d, KV * hd), la + ("embed", "kv_heads")),
+        "wv": p(L + (d, KV * hd), la + ("embed", "kv_heads")),
+        "wo": p(L + (H * hd, d), la + ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = p(L + (H * hd,), la + ("heads",), init="zeros")
+        specs["bk"] = p(L + (KV * hd,), la + ("kv_heads",), init="zeros")
+        specs["bv"] = p(L + (KV * hd,), la + ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = p(L + (hd,), la + ("norm",), init="ones")
+        specs["k_norm"] = p(L + (hd,), la + ("norm",), init="ones")
+    return specs
+
+
+def mlp_specs(cfg: ModelConfig, layers: int, prefix_axes=("layers",)):
+    d, f = cfg.d_model, cfg.d_ff
+    L, la = (layers,), prefix_axes
+    return {
+        "ffn_norm": p(L + (d,), la + ("norm",), init="ones"),
+        "w_gate": p(L + (d, f), la + ("embed", "ffn")),
+        "w_up": p(L + (d, f), la + ("embed", "ffn")),
+        "w_down": p(L + (f, d), la + ("ffn", "embed")),
+    }
+
+
+# ----------------------------------------------------------------- compute
+
+def attention(x, lp, cfg: ModelConfig, *, positions, cache=None,
+              cache_len=None, norm_eps=1e-5):
+    """Pre-norm attention sublayer.
+
+    Train/prefill: ``cache is None`` → causal flash attention.
+    Decode: ``cache = (k_cache, v_cache)`` (B, S_max, KV, hd); new k/v are
+    written at position ``cache_len`` and attention runs over the prefix.
+    Returns (residual output, new_cache_or_None).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is None:
+        attn = flash_attention(q, k, v, causal=True)
+    else:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+        attn = decode_attention(q, k_cache, v_cache, cache_len + S)
+        new_cache = (k_cache, v_cache)
+    out = attn.reshape(B, S, H * hd) @ lp["wo"]
+    return out, new_cache
+
+
+def swiglu(x, lp, cfg: ModelConfig):
+    h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+    g = jax.nn.silu((h @ lp["w_gate"]).astype(jnp.float32)).astype(h.dtype)
+    return (g * (h @ lp["w_up"])) @ lp["w_down"]

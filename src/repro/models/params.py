@@ -1,0 +1,67 @@
+"""Parameter specification: shapes + logical sharding axes + initializers.
+
+A model is described as a pytree of ``ParamSpec``; the same tree materializes
+three ways:
+  * ``init(rng)``        — real arrays (CPU smoke tests / examples);
+  * ``abstract()``       — ``jax.ShapeDtypeStruct`` (dry-run, no allocation);
+  * ``shardings(mesh, rules)`` — ``NamedSharding`` per param via the logical
+    axis rules (``repro.sharding.rules``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis names, len == ndim
+    init: str = "normal"                   # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def p(shape, axes, init="normal", scale=1.0, dtype=jnp.bfloat16) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_abstract(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=is_spec)
+
+
+def tree_init(specs, rng: jax.Array):
+    """Materialize real parameters (host-side, for small/smoke models)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / math.sqrt(max(1, fan_in))
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * std
+                   ).astype(spec.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)

@@ -1,0 +1,117 @@
+"""Mamba2 (SSD) block: in-proj → causal depthwise conv → SSD → gated norm →
+out-proj.  Single B/C group shared across heads (G=1), per the Mamba2 paper.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import gated_rmsnorm, rmsnorm, ssd, ssd_decode
+from .config import ModelConfig
+from .params import p
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * n
+    return d_in, nh, n, conv_ch
+
+
+def ssm_specs(cfg: ModelConfig, layers: int, prefix_axes=("layers",)):
+    d = cfg.d_model
+    d_in, nh, n, conv_ch = ssm_dims(cfg)
+    L, la = (layers,), prefix_axes
+    return {
+        "norm": p(L + (d,), la + ("norm",), init="ones"),
+        "in_proj": p(L + (d, 2 * d_in + 2 * n + nh), la + ("embed", "ssm_inner")),
+        "conv_w": p(L + (cfg.conv_width, conv_ch), la + ("conv", "ssm_inner"),
+                    scale=1.0),
+        "A_log": p(L + (nh,), la + ("ssm_heads",), init="zeros"),
+        "dt_bias": p(L + (nh,), la + ("ssm_heads",), init="zeros"),
+        "D": p(L + (nh,), la + ("ssm_heads",), init="ones"),
+        "out_norm": p(L + (d_in,), la + ("ssm_inner",), init="ones"),
+        "out_proj": p(L + (d_in, d), la + ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, nh, n, _ = ssm_dims(cfg)
+    z = proj[..., :d_in]
+    xs = proj[..., d_in:2 * d_in]
+    B_ = proj[..., 2 * d_in:2 * d_in + n]
+    C_ = proj[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xs, B_, C_, dt
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B, S, ch); w: (W, ch).
+
+    With ``conv_state`` (B, W-1, ch) prepended (decode), returns the last S
+    outputs and the new state."""
+    W = w.shape[0]
+    if conv_state is not None:
+        x = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = x[:, -(W - 1):]
+        pad = 0
+    else:
+        new_state = x[:, -(W - 1):]
+        pad = W - 1
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding=[(pad, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    # valid conv over the prepended state already yields exactly S outputs
+    return out, new_state
+
+
+def mamba_block(x, lp, cfg: ModelConfig, *, state=None):
+    """x: (B, S, d).  state = (conv_state, ssd_state) for decode (S=1).
+    Returns (residual-added output, new_state_or_None)."""
+    B, S, d = x.shape
+    d_in, nh, n, conv_ch = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+    proj = h @ lp["in_proj"]
+    z, xs, B_, C_, dt = _split_proj(proj, cfg)
+
+    xbc = jnp.concatenate([xs, B_, C_], axis=-1)
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, lp["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs, B_, C_ = (xbc[..., :d_in], xbc[..., d_in:d_in + n],
+                  xbc[..., d_in + n:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))     # (B,S,nh)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))                 # (nh,)
+    xh = xs.reshape(B, S, nh, hd)
+    x_dt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    a = dt * A
+
+    if state is None:
+        y, _final = ssd(x_dt, a, B_, C_, chunk=cfg.ssm_chunk)
+        new_state = None
+    else:
+        ssd_state = state[1]
+        y_t, new_ssd = ssd_decode(x_dt[:, 0], a[:, 0], B_[:, 0], C_[:, 0],
+                                  ssd_state)
+        y = y_t[:, None]
+        new_state = (new_conv, new_ssd)
+    y = y + lp["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z, lp["out_norm"], cfg.norm_eps)
+    out = y @ lp["out_proj"]
+    return x + out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    d_in, nh, n, conv_ch = ssm_dims(cfg)
+    conv_state = jnp.zeros((batch, cfg.conv_width - 1, conv_ch), jnp.bfloat16)
+    ssd_state = jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32)
+    return conv_state, ssd_state

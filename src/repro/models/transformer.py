@@ -1,0 +1,363 @@
+"""The unified multi-family model: specs, forward, decode.
+
+One code path covers all six assigned families:
+
+  dense/audio : scan(attention + SwiGLU)
+  moe         : scan(attention + top-k expert FFN), aux loss accumulated
+  vlm         : + gated cross-attention to (stub) image embeddings every
+                ``cross_attn_every`` layers
+  ssm         : scan(Mamba2 SSD block)
+  hybrid      : scan(Mamba2 block + weight-SHARED attention/MLP block fired
+                every ``shared_attn_every`` layers — the Zamba2 design)
+
+Layer stacks are scanned (`jax.lax.scan`) over stacked params so HLO size is
+O(1) in depth; per-layer remat (`jax.checkpoint`) is configurable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import decode_attention, flash_attention, rmsnorm
+from ..sharding.context import constrain
+from .config import ModelConfig
+from .layers import apply_rope, attention, attention_specs, mlp_specs, swiglu
+from .moe import moe_ffn, moe_specs
+from .params import p, tree_abstract, tree_init
+from .ssm import init_ssm_state, mamba_block, ssm_dims, ssm_specs
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "full",
+    "dots": "dots",
+}
+
+
+# ------------------------------------------------------------------ specs
+
+def build_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, L = cfg.d_model, cfg.n_layers
+    specs: Dict[str, Any] = {
+        "embed": p((cfg.vocab, d), ("embed_vocab", "embed"), scale=1.0),
+        "final_norm": p((d,), ("norm",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = p((d, cfg.vocab), ("embed", "vocab"))
+    if cfg.family in ("dense", "audio", "vlm"):
+        specs["blocks"] = {**attention_specs(cfg, L), **mlp_specs(cfg, L)}
+    elif cfg.family == "moe":
+        specs["blocks"] = {**attention_specs(cfg, L), **moe_specs(cfg, L)}
+    elif cfg.family == "ssm":
+        specs["blocks"] = ssm_specs(cfg, L)
+    elif cfg.family == "hybrid":
+        specs["blocks"] = ssm_specs(cfg, L)
+        shared = {**attention_specs(cfg, 1), **mlp_specs(cfg, 1)}
+        specs["shared"] = {k: p(v.shape[1:], v.axes[1:], v.init, v.scale)
+                           for k, v in shared.items()}
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        n_ca = cfg.n_layers // cfg.cross_attn_every
+        ca = attention_specs(cfg, n_ca)
+        ca = {f"ca_{k}": v for k, v in ca.items()}
+        ca["ca_gate"] = p((n_ca,), ("layers",), init="zeros")
+        specs["cross"] = ca
+    return specs
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return tree_init(build_specs(cfg), rng)
+
+
+def abstract_params(cfg: ModelConfig):
+    return tree_abstract(build_specs(cfg))
+
+
+# ------------------------------------------------------------- sub-blocks
+
+def _cross_attention(x, cap, cfg: ModelConfig, img_kv):
+    """Gated cross-attention to precomputed image K/V (one layer's params)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rmsnorm(x, cap["ca_attn_norm"], cfg.norm_eps)
+    q = (h @ cap["ca_wq"]).reshape(B, S, H, hd)
+    k, v = img_kv                                     # (B, n_img, KV, hd)
+    attn = flash_attention(q, k, v, causal=False)
+    out = attn.reshape(B, S, H * hd) @ cap["ca_wo"]
+    gate = jnp.tanh(cap["ca_gate"].astype(jnp.float32)).astype(x.dtype)
+    return out * gate
+
+
+def _image_kv(cap_stacked, cfg: ModelConfig, img_embeds):
+    """Precompute cross-attention K/V for all cross layers: (L_ca, B, n, KV, hd)."""
+    B, n_img, d = img_embeds.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    def one(cap):
+        k = (img_embeds @ cap["ca_wk"]).reshape(B, n_img, KV, hd)
+        v = (img_embeds @ cap["ca_wv"]).reshape(B, n_img, KV, hd)
+        return k, v
+
+    return jax.vmap(one)(
+        {k: v for k, v in cap_stacked.items() if k in ("ca_wk", "ca_wv")})
+
+
+def _shared_block(x, sp, cfg: ModelConfig, positions, cache=None,
+                  cache_len=None):
+    """Zamba2 weight-shared attention+MLP block (params have no layer dim)."""
+    lp = {k: v for k, v in sp.items()}
+    out, new_cache = attention(x, lp, cfg, positions=positions, cache=cache,
+                               cache_len=cache_len)
+    x = x + out
+    x = x + swiglu(x, lp, cfg)
+    return x, new_cache
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(params, cfg: ModelConfig, tokens=None, *, inputs_embeds=None,
+            img_embeds=None, remat: str = "full",
+            unroll: int = 1,
+            return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / prefill).  Returns (logits, aux_loss)."""
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(jnp.bfloat16)
+    else:
+        x = params["embed"][tokens]
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    B, S, d = x.shape
+    positions = jnp.arange(S)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    img_kv = None
+    if cfg.family == "vlm":
+        if img_embeds is None:
+            img_embeds = jnp.zeros((B, cfg.n_image_tokens, d), x.dtype)
+        img_kv = _image_kv(params["cross"], cfg, img_embeds)
+
+    def dense_body(carry, scanned):
+        x, aux = carry
+        lp, idx = scanned["lp"], scanned["idx"]
+        out, _ = attention(x, lp, cfg, positions=positions)
+        x = constrain(x + out, ("batch", "seq", "act_embed"))
+        if cfg.family == "moe":
+            ffn, a = moe_ffn(x, lp, cfg)
+            aux = aux + a
+        else:
+            ffn = swiglu(x, lp, cfg)
+        x = constrain(x + ffn, ("batch", "seq", "act_embed"))
+        if cfg.family == "vlm":
+            def with_ca(x):
+                ca_idx = idx // cfg.cross_attn_every
+                cap = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, ca_idx, 0, False),
+                    params["cross"])
+                kv = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, ca_idx, 0, False),
+                    img_kv)
+                return x + _cross_attention(x, cap, cfg, kv)
+            x = lax.cond(idx % cfg.cross_attn_every == 0, with_ca,
+                         lambda x: x, x)
+        return (x, aux), None
+
+    def ssm_body(carry, scanned):
+        x, aux = carry
+        lp, idx = scanned["lp"], scanned["idx"]
+        x, _ = mamba_block(x, lp, cfg)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        if cfg.family == "hybrid":
+            x = lax.cond(
+                idx % cfg.shared_attn_every == 0,
+                lambda x: _shared_block(x, params["shared"], cfg,
+                                        positions)[0],
+                lambda x: x, x)
+        return (x, aux), None
+
+    body = ssm_body if cfg.family in ("ssm", "hybrid") else dense_body
+    if remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    scanned = {"lp": params["blocks"], "idx": jnp.arange(cfg.n_layers)}
+    (x, aux), _ = lax.scan(body, (x, aux0), scanned, unroll=unroll)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = constrain(x @ head, ("batch", "seq", "act_vocab"))
+    return logits, aux
+
+
+# ------------------------------------------------------------------ decode
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      img_embeds=None, params=None) -> Dict[str, Any]:
+    """Decode cache pytree (zeros; prefill fills it)."""
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    L = cfg.n_layers
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        state["k"] = jnp.zeros((L, batch, max_seq, KV, hd), jnp.bfloat16)
+        state["v"] = jnp.zeros((L, batch, max_seq, KV, hd), jnp.bfloat16)
+    if cfg.family in ("ssm", "hybrid"):
+        conv, ssd_st = init_ssm_state(cfg, batch)
+        state["conv"] = jnp.broadcast_to(conv[None], (L,) + conv.shape)
+        state["ssd"] = jnp.broadcast_to(ssd_st[None], (L,) + ssd_st.shape)
+    if cfg.family == "hybrid":
+        n_inv = (L + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        state["shared_k"] = jnp.zeros((n_inv, batch, max_seq, KV, hd),
+                                      jnp.bfloat16)
+        state["shared_v"] = jnp.zeros((n_inv, batch, max_seq, KV, hd),
+                                      jnp.bfloat16)
+    if cfg.family == "vlm":
+        if params is not None and img_embeds is not None:
+            state["img_kv"] = _image_kv(params["cross"], cfg, img_embeds)
+        else:
+            n_ca = L // cfg.cross_attn_every
+            z = jnp.zeros((n_ca, batch, cfg.n_image_tokens, KV, hd),
+                          jnp.bfloat16)
+            state["img_kv"] = (z, z)
+    return state
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens=None, *,
+                inputs_embeds=None,
+                unroll: int = 1) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch.  tokens: (B, 1)."""
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(jnp.bfloat16)
+    else:
+        x = params["embed"][tokens]
+    B = x.shape[0]
+    pos = state["pos"]
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        def body(carry, scanned):
+            x = carry
+            lp, idx, kc, vc = (scanned["lp"], scanned["idx"], scanned["k"],
+                               scanned["v"])
+            out, (kc, vc) = attention(x, lp, cfg, positions=positions,
+                                      cache=(kc, vc), cache_len=pos)
+            x = x + out
+            if cfg.family == "moe":
+                ffn, _ = moe_ffn(x, lp, cfg)
+            else:
+                ffn = swiglu(x, lp, cfg)
+            x = x + ffn
+            if cfg.family == "vlm":
+                def with_ca(x):
+                    ca_idx = idx // cfg.cross_attn_every
+                    cap = jax.tree.map(
+                        lambda a: lax.dynamic_index_in_dim(a, ca_idx, 0, False),
+                        params["cross"])
+                    kv = jax.tree.map(
+                        lambda a: lax.dynamic_index_in_dim(a, ca_idx, 0, False),
+                        state["img_kv"])
+                    return x + _cross_attention(x, cap, cfg, kv)
+                x = lax.cond(idx % cfg.cross_attn_every == 0, with_ca,
+                             lambda x: x, x)
+            return x, {"k": kc, "v": vc}
+
+        scanned = {"lp": params["blocks"], "idx": jnp.arange(cfg.n_layers),
+                   "k": state["k"], "v": state["v"]}
+        x, caches = lax.scan(body, x, scanned, unroll=unroll)
+        new_state = dict(state, pos=pos + 1, k=caches["k"], v=caches["v"])
+    else:
+        def body(carry, scanned):
+            x, shared_kv = carry
+            lp, idx = scanned["lp"], scanned["idx"]
+            x, (conv, ssd_st) = mamba_block(
+                x, lp, cfg, state=(scanned["conv"], scanned["ssd"]))
+            if cfg.family == "hybrid":
+                def with_shared(ops):
+                    x, (sk, sv) = ops
+                    inv = idx // cfg.shared_attn_every
+                    kc = lax.dynamic_index_in_dim(sk, inv, 0, False)
+                    vc = lax.dynamic_index_in_dim(sv, inv, 0, False)
+                    x, (kc, vc) = _shared_block(x, params["shared"], cfg,
+                                                positions, cache=(kc, vc),
+                                                cache_len=pos)
+                    sk = lax.dynamic_update_index_in_dim(sk, kc, inv, 0)
+                    sv = lax.dynamic_update_index_in_dim(sv, vc, inv, 0)
+                    return x, (sk, sv)
+                x, shared_kv = lax.cond(
+                    idx % cfg.shared_attn_every == 0, with_shared,
+                    lambda ops: ops, (x, shared_kv))
+            return (x, shared_kv), {"conv": conv, "ssd": ssd_st}
+
+        shared_kv = ((state["shared_k"], state["shared_v"])
+                     if cfg.family == "hybrid" else ())
+        scanned = {"lp": params["blocks"], "idx": jnp.arange(cfg.n_layers),
+                   "conv": state["conv"], "ssd": state["ssd"]}
+        (x, shared_kv), caches = lax.scan(body, (x, shared_kv), scanned,
+                                          unroll=unroll)
+        new_state = dict(state, pos=pos + 1, conv=caches["conv"],
+                         ssd=caches["ssd"])
+        if cfg.family == "hybrid":
+            new_state["shared_k"], new_state["shared_v"] = shared_kv
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    return logits, new_state
+
+
+# ------------------------------------------------------------------- loss
+
+def lm_loss(logits, labels, aux=None, aux_weight: float = 0.01):
+    """Token cross-entropy (f32) + optional MoE aux loss."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (logz - gold).mean()
+    if aux is not None:
+        loss = loss + aux_weight * aux / 1.0
+    return loss
+
+
+def lm_loss_chunked(x, params, cfg: ModelConfig, labels, aux=None,
+                    aux_weight: float = 0.01, vocab_chunk: int = 16384):
+    """Memory-efficient cross-entropy: streams the vocab in chunks so the
+    (B, S, V) f32 logits tensor never materializes (peak activation memory
+    O(B·S·chunk) instead of O(B·S·V); the backward pass recomputes each
+    chunk — classic remat-CE).  §Perf iteration for big-vocab train cells."""
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    V = head.shape[-1]
+    nb = -(-V // vocab_chunk)
+    pad = nb * vocab_chunk - V
+    if pad:
+        head = jnp.pad(head, ((0, 0), (0, pad)))
+    B, S, d = x.shape
+
+    def body(carry, i):
+        m, s, gold = carry
+        hc = lax.dynamic_slice_in_dim(head, i * vocab_chunk, vocab_chunk, 1)
+        lg = (x @ hc).astype(jnp.float32)            # (B, S, chunk)
+        base = i * vocab_chunk
+        k_pos = base + jnp.arange(vocab_chunk)
+        valid = k_pos < V
+        lg = jnp.where(valid[None, None, :], lg, -1e30)
+        m_new = jnp.maximum(m, lg.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        off = jnp.clip(labels - base, 0, vocab_chunk - 1)
+        g = jnp.take_along_axis(lg, off[..., None], axis=-1)[..., 0]
+        in_chunk = (labels >= base) & (labels < base + vocab_chunk)
+        gold = jnp.where(in_chunk, g, gold)
+        return (m_new, s, gold), None
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    s0 = jnp.zeros((B, S), jnp.float32)
+    g0 = jnp.zeros((B, S), jnp.float32)
+    (m, s, gold), _ = lax.scan(jax.checkpoint(body), (m0, s0, g0),
+                               jnp.arange(nb))
+    loss = (jnp.log(s) + m - gold).mean()
+    if aux is not None:
+        loss = loss + aux_weight * aux
+    return loss

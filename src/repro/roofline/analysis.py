@@ -1,0 +1,205 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed from the optimized HLO text: the summed operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (per-shard shapes → bytes moved per chip, ×(n-1)/n wire
+factor folded into the ring estimate).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fp8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# shape like  bf16[16,4096,128]{2,1,0:T(8,128)(2,1)}  or  f32[] or tuples
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[\w\[\],{}:()#*\s]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum *output shard* sizes of collective ops in optimized HLO.
+
+    The lhs shape of each collective instruction is the per-shard result —
+    a good proxy for bytes a chip moves per invocation (all-reduce moves ~2×
+    in a ring; we fold that into a ×2 factor for all-reduce).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r".*=\s*(\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+            r"all-to-all|collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            nbytes *= 2          # reduce-scatter + all-gather ring phases
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float            # global FLOPs (cost_analysis is per-device
+                                 # under SPMD — recorded as reported)
+    hlo_gbytes: float
+    collective_gbytes: float     # per-chip bytes over ICI
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_gflops: float          # 6·N·D (or 6·N_active·D)
+    collectives: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    bytes_per_device: Optional[float] = None
+    fits_hbm: Optional[bool] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_gflops <= 0:
+            return 0.0
+        return self.model_gflops / self.hlo_gflops
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step estimate: overlap-free upper bound is the max term;
+        we report the max (ideal overlap) — the bottleneck term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max-term: 1.0 = perfectly compute-bound."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops": round(self.hlo_gflops, 1),
+            "hlo_gbytes": round(self.hlo_gbytes, 2),
+            "coll_gbytes": round(self.collective_gbytes, 3),
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "dominant": self.dominant,
+            "model_gflops": round(self.model_gflops, 1),
+            "useful_ratio": round(self.useful_flops_ratio, 3),
+            "roofline_fraction": round(self.roofline_fraction, 3),
+            "bytes_per_device_gb": (round(self.bytes_per_device / 2**30, 2)
+                                    if self.bytes_per_device else None),
+            "fits_hbm_16g": self.fits_hbm,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for a train step, 2·N·D for inference (per the
+    standard decoder accounting), using active params for MoE.  D = tokens
+    processed by the step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(arch: str, shape, mesh_name: str, chips: int, cost: dict,
+            hlo_text: str, cfg, memory_stats: Optional[dict] = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: sum the "bytes accessed" keys
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    if nbytes == 0.0:
+        nbytes = sum(float(v) for k, v in cost.items()
+                     if k.startswith("bytes accessed"))
+    coll = parse_collectives(hlo_text)
+    mf = model_flops(cfg, shape)
+
+    # cost_analysis under SPMD reports per-device numbers; normalize terms
+    # per chip directly.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW
+
+    bytes_per_device = None
+    fits = None
+    if memory_stats:
+        bytes_per_device = memory_stats.get("bytes_per_device")
+        if bytes_per_device:
+            fits = bytes_per_device <= 16 * 2**30   # v5e HBM
+
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=nbytes / 1e9,
+        collective_gbytes=coll.total_bytes / 1e9,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_gflops=mf / 1e9 / chips,
+        collectives=coll.counts,
+        collective_bytes_by_kind={k: v / 1e9 for k, v in
+                                  coll.bytes_by_kind.items()},
+        bytes_per_device=bytes_per_device, fits_hbm=fits)

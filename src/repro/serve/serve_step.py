@@ -1,0 +1,171 @@
+"""Serving steps: prefill (full-sequence forward) and decode (one token with
+a KV/SSM cache), with per-shape sharding — the decode_32k / long_500k cells
+lower ``serve_step``, not ``train_step``.
+
+For long_500k (batch=1) the KV cache is *sequence-sharded* over the data axis
+(batch cannot shard); decode attention contracts over the sharded axis and
+XLA inserts the reduction — the roofline's collective term shows it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeSpec
+from ..models.ssm import ssm_dims
+from ..models.transformer import (build_specs, decode_step, forward,
+                                  init_decode_state)
+from ..sharding import (LogicalRules, logical_sharding, sharding_ctx,
+                        shardings_for)
+
+CACHE_AXES = {
+    "pos": (),
+    "k": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+    "v": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+    "conv": ("layers", "cache_batch", None, "ssm_inner"),
+    "ssd": ("layers", "cache_batch", "ssm_heads", None, None),
+    "shared_k": (None, "cache_batch", "cache_seq", "kv_heads", None),
+    "shared_v": (None, "cache_batch", "cache_seq", "kv_heads", None),
+    "img_kv": (None, "cache_batch", None, "kv_heads", None),
+}
+
+
+def decode_state_structs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    state = init_decode_state(cfg, 1, 8)  # tiny template for the pytree
+    B, S = shape.global_batch, shape.seq_len
+
+    def fix(path, leaf):
+        name = path
+        if name == "pos":
+            return jax.ShapeDtypeStruct((), jnp.int32)
+        if name in ("k", "v", "shared_k", "shared_v"):
+            L = leaf.shape[0]
+            KV, hd = cfg.n_kv_heads, cfg.hd
+            return jax.ShapeDtypeStruct((L, B, S, KV, hd), jnp.bfloat16)
+        if name == "conv":
+            L = leaf.shape[0]
+            return jax.ShapeDtypeStruct((L, B) + leaf.shape[2:], jnp.bfloat16)
+        if name == "ssd":
+            L = leaf.shape[0]
+            return jax.ShapeDtypeStruct((L, B) + leaf.shape[2:], jnp.float32)
+        if name == "img_kv":
+            return jax.ShapeDtypeStruct(
+                (leaf.shape[0], B) + leaf.shape[2:], jnp.bfloat16)
+        raise KeyError(name)
+
+    out = {}
+    for k, v in state.items():
+        if k == "img_kv":
+            out[k] = tuple(fix("img_kv", leaf) for leaf in v)
+        else:
+            out[k] = fix(k, v)
+    return out
+
+
+def decode_state_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                           rules: Optional[LogicalRules] = None):
+    structs = decode_state_structs(cfg, shape)
+    out = {}
+    for k, v in structs.items():
+        if k == "img_kv":
+            out[k] = tuple(
+                logical_sharding(CACHE_AXES["img_kv"], leaf.shape, mesh, rules)
+                for leaf in v)
+        else:
+            out[k] = logical_sharding(CACHE_AXES[k], v.shape, mesh, rules)
+    return out
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh,
+                    rules: Optional[LogicalRules] = None, unroll: int = 1):
+    def serve_step(params, state, tokens=None, inputs_embeds=None):
+        with sharding_ctx(mesh, rules):
+            logits, state = decode_step(params, cfg, state, tokens,
+                                        inputs_embeds=inputs_embeds,
+                                        unroll=unroll)
+        return logits, state
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh,
+                 rules: Optional[LogicalRules] = None, unroll: int = 1):
+    def prefill(params, tokens=None, inputs_embeds=None, img_embeds=None):
+        with sharding_ctx(mesh, rules):
+            logits, _ = forward(params, cfg, tokens,
+                                inputs_embeds=inputs_embeds,
+                                img_embeds=img_embeds, remat="none",
+                                unroll=unroll)
+        return logits
+    return prefill
+
+
+def lower_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     rules: Optional[LogicalRules] = None, unroll: int = 1):
+    """AOT-lower one decode step at (batch, kv_len = shape.seq_len)."""
+    specs = build_specs(cfg)
+    params_s = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+    params_sh = shardings_for(specs, mesh, rules)
+    state_s = decode_state_structs(cfg, shape)
+    state_sh = decode_state_shardings(cfg, shape, mesh, rules)
+    B = shape.global_batch
+    if cfg.family == "audio":
+        tok_s = None
+        emb_s = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        emb_sh = logical_sharding(("batch", "seq", "act_embed"),
+                                  emb_s.shape, mesh, rules)
+        step = make_serve_step(cfg, mesh, rules, unroll)
+        jitted = jax.jit(
+            lambda p, s, e: step(p, s, inputs_embeds=e),
+            in_shardings=(params_sh, state_sh, emb_sh),
+            out_shardings=(None, state_sh), donate_argnums=(1,))
+        return jitted.lower(params_s, state_s, emb_s)
+    tok_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = logical_sharding(("batch", "seq"), tok_s.shape, mesh, rules)
+    step = make_serve_step(cfg, mesh, rules, unroll)
+    jitted = jax.jit(
+        step,
+        in_shardings=(params_sh, state_sh, tok_sh),
+        out_shardings=(None, state_sh), donate_argnums=(1,))
+    return jitted.lower(params_s, state_s, tok_s)
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  rules: Optional[LogicalRules] = None, unroll: int = 1):
+    specs = build_specs(cfg)
+    params_s = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+    params_sh = shardings_for(specs, mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    fn = make_prefill(cfg, mesh, rules, unroll)
+    kwargs_s = {}
+    kwargs_sh = {}
+    if cfg.family == "audio":
+        kwargs_s["inputs_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                         jnp.bfloat16)
+    else:
+        kwargs_s["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        kwargs_s["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    names = {"tokens": ("batch", "seq"),
+             "inputs_embeds": ("batch", "seq", "act_embed"),
+             "img_embeds": ("batch", "seq", "act_embed")}
+    keys = sorted(kwargs_s)
+    args_s = tuple(kwargs_s[k] for k in keys)
+    args_sh = tuple(logical_sharding(names[k], kwargs_s[k].shape, mesh, rules)
+                    for k in keys)
+
+    def positional(p, *vals):
+        return fn(p, **dict(zip(keys, vals)))
+
+    jitted = jax.jit(
+        positional,
+        in_shardings=(params_sh,) + args_sh,
+        out_shardings=None)
+    return jitted.lower(params_s, *args_s)

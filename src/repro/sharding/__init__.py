@@ -1,0 +1,6 @@
+from .context import constrain, sharding_ctx
+from .rules import (LogicalRules, DEFAULT_RULES, apply_rules, logical_sharding,
+                    shardings_for)
+
+__all__ = ["DEFAULT_RULES", "LogicalRules", "apply_rules", "constrain",
+           "logical_sharding", "sharding_ctx", "shardings_for"]

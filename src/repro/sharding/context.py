@@ -1,0 +1,38 @@
+"""Ambient activation-sharding context.
+
+Model code calls ``constrain(x, ("batch", "seq", "act_embed"))``; when a
+(mesh, rules) context is active (set by the train/serve step builders), this
+lowers to ``with_sharding_constraint`` with the logical rules applied —
+otherwise it is a no-op (CPU smoke tests, plain eager use).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from .rules import LogicalRules, apply_rules
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules: Optional[LogicalRules] = None):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = apply_rules(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

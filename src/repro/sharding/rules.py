@@ -1,0 +1,111 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Params and activations carry *logical* axis names ("embed", "heads", "ffn",
+"experts", "batch", "seq", …); a rules table maps each to zero or more mesh
+axes.  Hillclimbing a sharding scheme = editing one table (see §Perf in
+EXPERIMENTS.md for the iterations).
+
+Divisibility fallback: if a dimension is not divisible by the mapped mesh
+axes' product (e.g. 4 KV heads on a 16-way model axis), the mapping is
+dropped for that dim (replicated) rather than failing — recorded so the
+roofline can report it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.params import ParamSpec, is_spec
+
+AxisMap = Union[str, Tuple[str, ...], None]
+LogicalRules = Dict[str, AxisMap]
+
+# The production mesh axes: ("pod",) "data", "model".
+#   pod+data — DP/FSDP; model — TP/EP.
+DEFAULT_RULES: LogicalRules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": None,
+    "act_ffn": "model",
+    "act_experts": "model",
+    "act_vocab": "model",
+    "moe_capacity": None,     # variant ep_capacity → "data"
+    "cache_seq": None,
+    "cache_batch": ("pod", "data"),
+    # params: TP axis
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "vocab": "model",
+    "embed_vocab": "model",   # the embedding table's vocab dim (gather side)
+    # params: FSDP axis (the non-TP big dim of each matrix)
+    "embed": "data",
+    "embed_noshard": None,
+    # stacked-layer dim and small vectors
+    "layers": None,
+    "norm": None,
+    "conv": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+}
+
+
+def _mesh_axes_size(mesh: Mesh, amap: AxisMap) -> int:
+    if amap is None:
+        return 1
+    axes = (amap,) if isinstance(amap, str) else amap
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, amap: AxisMap) -> AxisMap:
+    """Drop mesh axes that don't exist in this mesh (e.g. 'pod' single-pod)."""
+    if amap is None:
+        return None
+    axes = (amap,) if isinstance(amap, str) else tuple(amap)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def apply_rules(axes: Sequence[Optional[str]], shape: Sequence[int],
+                mesh: Mesh, rules: Optional[LogicalRules] = None,
+                used_ok: bool = False) -> P:
+    """Logical axes of one array → PartitionSpec, with divisibility/duplicate
+    fallback (an axis may shard at most one dim)."""
+    rules = rules or DEFAULT_RULES
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        amap = _present(mesh, rules.get(name)) if name else None
+        if amap is not None:
+            flat = (amap,) if isinstance(amap, str) else tuple(amap)
+            if any(a in used for a in flat) or dim % _mesh_axes_size(mesh, flat) != 0:
+                amap = None
+            else:
+                used.update(flat)
+        spec.append(amap)
+    return P(*spec)
+
+
+def logical_sharding(axes: Sequence[Optional[str]], shape: Sequence[int],
+                     mesh: Mesh,
+                     rules: Optional[LogicalRules] = None) -> NamedSharding:
+    return NamedSharding(mesh, apply_rules(axes, shape, mesh, rules))
+
+
+def shardings_for(specs, mesh: Mesh, rules: Optional[LogicalRules] = None):
+    """Pytree of ParamSpec → pytree of NamedSharding."""
+    return jax.tree.map(
+        lambda s: logical_sharding(s.axes, s.shape, mesh, rules), specs,
+        is_leaf=is_spec)

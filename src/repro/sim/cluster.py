@@ -1,0 +1,191 @@
+"""Discrete-event cluster simulator: jobs × IGTCache × shared remote link.
+
+Semantics:
+  * every job owns its compute device (Table 3 assigns distinct GPUs), so
+    jobs contend only for the remote link and the shared cache;
+  * a step = read batch → compute; the step's compute starts when all its
+    demand bytes have landed (hits cost the local service time);
+  * engine-issued prefetch candidates ride the link at background priority
+    and are admitted on completion (``complete_prefetch``);
+  * a demand read that finds its block already in flight (as someone else's
+    miss or a background prefetch) waits for that transfer instead of
+    re-fetching (single-flight).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core import IGTCache, block_key
+from ..core.types import PathT
+from .link import SharedLink
+from .workloads import Job, WorkloadSuite
+
+
+@dataclass
+class SimResult:
+    jct: Dict[int, float]                      # job_id -> completion seconds
+    hit_ratio: float
+    stats: dict
+    makespan: float
+    link_utilization: float
+    step_trace: Dict[int, List[float]]         # job_id -> step finish times
+    alloc_trace: List[dict] = field(default_factory=list)
+
+    @property
+    def avg_jct(self) -> float:
+        return sum(self.jct.values()) / max(1, len(self.jct))
+
+
+class ClusterSim:
+    def __init__(self, suite: WorkloadSuite, engine: IGTCache,
+                 bandwidth_Bps: float = 125e6, latency_s: float = 0.150,
+                 local_latency_s: float = 0.0005,
+                 local_bandwidth_Bps: float = 6e9,
+                 trace_alloc: bool = False,
+                 stop_job_at: Optional[Tuple[int, float]] = None) -> None:
+        self.suite = suite
+        self.engine = engine
+        self.link = SharedLink(bandwidth_Bps, latency_s)
+        self.local_latency = local_latency_s
+        self.local_bw = local_bandwidth_Bps
+        self.trace_alloc = trace_alloc
+        self.stop_job_at = stop_job_at       # (job_id, time): forced stop (Fig 11)
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self._waiters: Dict[str, List[int]] = {}
+        self._outstanding: Dict[int, int] = {}
+        self._step_idx: Dict[int, int] = {}
+        self._jobs: Dict[int, Job] = {j.job_id: j for j in suite.jobs}
+        self._done: Dict[int, float] = {}
+        self._step_trace: Dict[int, List[float]] = {j.job_id: [] for j in suite.jobs}
+        self._alloc_trace: List[dict] = []
+        self._stopped: set = set()
+        self.now = 0.0
+
+    # ---------------------------------------------------------------- events
+    def _push(self, t: float, kind: str, payload: object = None) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def run(self, max_time: float = 1e7) -> SimResult:
+        for j in self.suite.jobs:
+            self._push(j.submit_time, "job_start", j.job_id)
+        self._push(5.0, "tick", None)
+        if self.stop_job_at is not None:
+            self._push(self.stop_job_at[1], "stop_job", self.stop_job_at[0])
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if t > max_time:
+                break
+            self.now = t
+            if kind == "job_start":
+                self._step_idx[payload] = 0
+                self._start_step(payload)
+            elif kind == "compute_done":
+                jid = payload
+                if jid in self._stopped:
+                    continue
+                self._step_trace[jid].append(self.now)
+                self._step_idx[jid] += 1
+                self._start_step(jid)
+            elif kind == "pump":
+                self._pump()
+            elif kind == "transfer_done":
+                self._on_transfer_done(*payload)
+            elif kind == "tick":
+                self.engine.tick(self.now)
+                if self.trace_alloc:
+                    self._sample_alloc()
+                if len(self._done) + len(self._stopped) < len(self._jobs):
+                    self._push(self.now + 5.0, "tick", None)
+            elif kind == "stop_job":
+                self._stopped.add(payload)
+        jct = {jid: t - self._jobs[jid].submit_time
+               for jid, t in self._done.items()}
+        util = self.link.busy_time / max(1e-9, self.now)
+        return SimResult(jct=jct, hit_ratio=self.engine.hit_ratio(),
+                         stats=self.engine.snapshot(), makespan=self.now,
+                         link_utilization=util, step_trace=self._step_trace,
+                         alloc_trace=self._alloc_trace)
+
+    # ----------------------------------------------------------------- steps
+    def _start_step(self, jid: int) -> None:
+        if jid in self._stopped:
+            return
+        job = self._jobs[jid]
+        i = self._step_idx[jid]
+        if i >= len(job.steps):
+            self._done[jid] = self.now
+            return
+        compute, reqs = job.steps[i]
+        waits = 0
+        local_cost = 0.0
+        for (fpath, off, size) in reqs:
+            out = self.engine.read(fpath, off, size, self.now)
+            for blk in out.blocks:
+                if blk.hit:
+                    local_cost += self.local_latency + blk.size / self.local_bw
+                    if self.link.pending(blk.key):
+                        # bytes still in flight (admitted at miss/prefetch
+                        # issue time) — single-flight: wait on that transfer
+                        self.link.promote(blk.key)
+                        self._waiters.setdefault(blk.key, []).append(jid)
+                        waits += 1
+                else:
+                    if self.link.pending(blk.key):
+                        self.link.promote(blk.key)
+                    else:
+                        self.link.enqueue(blk.size, blk.key, demand=True,
+                                          callback=None)
+                    self._waiters.setdefault(blk.key, []).append(jid)
+                    waits += 1
+            for (ppath, psize) in out.prefetches:
+                pkey = block_key(ppath)
+                if not self.link.pending(pkey):
+                    self.link.enqueue(psize, pkey, demand=False,
+                                      callback=(ppath, psize))
+        self._outstanding[jid] = waits
+        self._pump()
+        if waits == 0:
+            self._push(self.now + compute + local_cost, "compute_done", jid)
+        else:
+            # stash compute duration; applied when last byte lands
+            self._pending_compute = getattr(self, "_pending_compute", {})
+            self._pending_compute[jid] = compute + local_cost
+
+    def _pump(self) -> None:
+        while True:
+            got = self.link.pump(self.now)
+            if got is None:
+                break
+            finish, t = got
+            self._push(finish, "transfer_done", (t.key, t.demand, t.callback))
+            # link frees (busy end) possibly before 'finish' due to latency
+            self._push(self.link.free_at, "pump", None)
+
+    def _on_transfer_done(self, key: str, demand: bool, callback) -> None:
+        if callback is not None:
+            ppath, psize = callback
+            self.engine.complete_prefetch(ppath, psize, self.now)
+        for jid in self._waiters.pop(key, ()):  # wake demand waiters
+            if jid in self._stopped:
+                continue
+            self._outstanding[jid] -= 1
+            if self._outstanding[jid] == 0:
+                compute = self._pending_compute.pop(jid, 0.0)
+                self._push(self.now + compute, "compute_done", jid)
+        self._pump()
+
+    # ----------------------------------------------------------------- traces
+    def _sample_alloc(self) -> None:
+        from ..core.allocation import marginal_benefit
+        row = {"t": self.now}
+        for path, cmu in self.engine.cache.cmus.items():
+            if cmu is self.engine.cache.default_cmu:
+                continue
+            est = marginal_benefit(cmu, self.now, self.engine.cfg)
+            row["/".join(path)] = {"quota": cmu.quota, "used": cmu.used,
+                                   "benefit": est.benefit}
+        self._alloc_trace.append(row)

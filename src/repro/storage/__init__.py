@@ -1,0 +1,5 @@
+"""Simulated disaggregated remote storage (S3-style) for IGTCache."""
+from .datasets import DatasetSpec, make_dataset
+from .object_store import RemoteStore, TransferModel
+
+__all__ = ["DatasetSpec", "RemoteStore", "TransferModel", "make_dataset"]

@@ -1,0 +1,134 @@
+"""The remote object store + transfer cost model.
+
+Implements the ``repro.core.meta.StoreMeta`` protocol for IGTCache and a
+shared-link transfer model calibrated to the paper's testbed (§5.1): ~150 ms
+request latency, ~1 Gbps aggregate remote bandwidth.  The link is a single
+FIFO resource — concurrent jobs and background prefetches contend for it,
+which is exactly the effect the hierarchical-prefetch experiment (Fig. 7/9)
+depends on.
+
+Content is synthesized deterministically from the block key (for the real
+training pipeline); the simulator only uses sizes/latencies.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.types import MB, PathT
+from .datasets import DatasetSpec, FileEntry
+
+
+@dataclass
+class TransferModel:
+    """Shared remote link: latency + bandwidth, FIFO service."""
+
+    latency_s: float = 0.150          # paper: ~150 ms to S3
+    bandwidth_Bps: float = 125e6      # paper: ~1 Gbps
+    # local cache service (DRAM/SSD over NFS) — effectively free vs remote
+    local_latency_s: float = 0.0005
+    local_bandwidth_Bps: float = 6e9
+
+    def remote_time(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+    def local_time(self, nbytes: int) -> float:
+        return self.local_latency_s + nbytes / self.local_bandwidth_Bps
+
+
+class RemoteStore:
+    """Dataset registry + metadata resolution + content synthesis."""
+
+    def __init__(self, transfer: Optional[TransferModel] = None) -> None:
+        self.datasets: Dict[str, DatasetSpec] = {}
+        self.transfer = transfer or TransferModel()
+        self._files: Dict[PathT, FileEntry] = {}
+        self._dirs: Dict[PathT, List[str]] = {}
+        self._index: Dict[Tuple[PathT, str], int] = {}
+        self._subtree_bytes: Dict[PathT, int] = {}
+        self._flat_index: Dict[PathT, Tuple[int, int]] = {}
+
+    # -- registry -------------------------------------------------------------
+    def add(self, spec: DatasetSpec) -> None:
+        self.datasets[spec.name] = spec
+        for f in spec.files:
+            self._files[f.path] = f
+        for parent, names in spec.dirs.items():
+            self._dirs[parent] = names
+            for i, n in enumerate(names):
+                self._index[(parent, n)] = i
+        # root listing across datasets
+        roots = sorted(self.datasets.keys())
+        self._dirs[()] = roots
+        for i, n in enumerate(roots):
+            self._index[((), n)] = i
+        self._subtree_bytes.clear()
+        self._flat_index.clear()
+
+    # -- StoreMeta protocol -----------------------------------------------------
+    def listing(self, path: PathT) -> List[str]:
+        return self._dirs.get(path, [])
+
+    def listing_size(self, path: PathT) -> int:
+        return len(self._dirs.get(path, ()))
+
+    def child_index(self, path: PathT, name: str) -> int:
+        return self._index.get((path, name), 0)
+
+    def is_file(self, path: PathT) -> bool:
+        return path in self._files
+
+    def file_size(self, path: PathT) -> int:
+        f = self._files.get(path)
+        return f.size if f is not None else 0
+
+    def subtree_bytes(self, path: PathT) -> int:
+        cached = self._subtree_bytes.get(path)
+        if cached is not None:
+            return cached
+        total = 0
+        for fpath, f in self._files.items():
+            if fpath[:len(path)] == path:
+                total += f.size
+        self._subtree_bytes[path] = total
+        return total
+
+    def iter_block_keys(self, path: PathT,
+                        block_size: int = 4 * MB) -> Iterator[Tuple[PathT, int]]:
+        for fpath, f in self._files.items():
+            if fpath[:len(path)] != path:
+                continue
+            nblocks = max(1, -(-f.size // block_size))
+            for b in range(nblocks):
+                yield fpath + (f"#{b}",), min(block_size, f.size - b * block_size)
+
+    def flat_block_index(self, file_path: PathT, block: int,
+                         block_size: int = 4 * MB) -> Tuple[int, int]:
+        """Global block ordinal within the file's dataset (traversal order)."""
+        if not self._flat_index:
+            self._build_flat_index(block_size)
+        start, total = self._flat_index.get(file_path, (0, 1))
+        return start + block, total
+
+    def _build_flat_index(self, block_size: int) -> None:
+        per_ds_cursor: Dict[str, int] = {}
+        starts: Dict[PathT, int] = {}
+        for fpath, f in self._files.items():  # insertion = traversal order
+            ds = fpath[0]
+            cur = per_ds_cursor.get(ds, 0)
+            starts[fpath] = cur
+            per_ds_cursor[ds] = cur + max(1, -(-f.size // block_size))
+        for fpath in starts:
+            self._flat_index[fpath] = (starts[fpath], per_ds_cursor[fpath[0]])
+
+    # -- content (for the real training pipeline) --------------------------------
+    def fetch_block(self, block_path: PathT, size: int) -> np.ndarray:
+        """Deterministic synthetic bytes for a block (seeded by its key)."""
+        seed = int.from_bytes(
+            hashlib.blake2b("/".join(block_path).encode(),
+                            digest_size=8).digest(), "little")
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, 256, size=size, dtype=np.uint8)

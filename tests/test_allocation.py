@@ -1,0 +1,105 @@
+"""Marginal-benefit allocation: B formulas, ghost cache, rebalance moves."""
+import pytest
+
+from repro.core.allocation import (BufferWindow, FluidAllocator,
+                                   QuiverAllocator, Rebalancer,
+                                   marginal_benefit)
+from repro.core.cache import CacheManageUnit, UnifiedCache
+from repro.core.types import CacheConfig, Pattern
+
+MB = 1 << 20
+CFG = CacheConfig(min_share=4 * MB, rebalance_quantum=4 * MB,
+                  rebalance_period=1.0, block_size=MB)
+
+
+def mk_cmu(cache, root, pattern, dataset=64 * MB, rate_hz=100.0, n=200,
+           ghost_hits=0):
+    cmu = cache.create_cmu(root, dataset_bytes=dataset, now=0.0)
+    sub = cmu.substream(root, pattern)
+    for i in range(n):
+        cmu.note_access(i / rate_hz, MB)
+    if pattern is Pattern.SKEWED:
+        for i in range(ghost_hits):
+            cmu.buffer_window.on_evict(f"g{i}")
+        for i in range(ghost_hits):
+            cmu.buffer_window.probe(f"g{i}")      # hits
+        for i in range(ghost_hits):
+            cmu.buffer_window.probe(f"m{i}")      # misses
+    return cmu
+
+
+def test_benefit_sequential_zero():
+    c = UnifiedCache(256 * MB, CFG)
+    cmu = mk_cmu(c, ("s",), Pattern.SEQUENTIAL)
+    est = marginal_benefit(cmu, now=2.0, cfg=CFG)
+    assert est.benefit == 0.0
+    assert not est.wants_more
+
+
+def test_benefit_random_inverse_epoch():
+    c = UnifiedCache(256 * MB, CFG)
+    cmu = mk_cmu(c, ("r",), Pattern.RANDOM, dataset=512 * MB, rate_hz=100.0)
+    est = marginal_benefit(cmu, now=2.0, cfg=CFG)
+    # B = rate / n_units = 100 / 512  (1MB mean access size)
+    assert est.benefit == pytest.approx(100 / 512, rel=0.15)
+    assert est.wants_more                        # quota < dataset
+
+
+def test_benefit_random_decays_when_idle():
+    c = UnifiedCache(256 * MB, CFG)
+    cmu = mk_cmu(c, ("r",), Pattern.RANDOM)
+    b_live = marginal_benefit(cmu, now=2.0, cfg=CFG).benefit
+    b_idle = marginal_benefit(cmu, now=500.0, cfg=CFG).benefit
+    assert b_idle < 0.05 * b_live
+
+
+def test_benefit_skewed_ghost():
+    c = UnifiedCache(256 * MB, CFG)
+    cmu = mk_cmu(c, ("k",), Pattern.SKEWED, ghost_hits=50)
+    est = marginal_benefit(cmu, now=2.0, cfg=CFG)
+    # lam ~100/s, f=0.5, w=100 -> 0.5
+    assert est.benefit == pytest.approx(100 * 0.5 / CFG.buffer_window,
+                                        rel=0.2)
+    assert est.wants_more
+
+
+def test_rebalancer_moves_toward_benefit():
+    c = UnifiedCache(256 * MB, CFG)
+    seq = mk_cmu(c, ("s",), Pattern.SEQUENTIAL)
+    rnd = mk_cmu(c, ("r",), Pattern.RANDOM, dataset=128 * MB)
+    seq.set_quota(64 * MB)
+    q_before = rnd.quota
+    rb = Rebalancer(CFG)
+    moves = rb.rebalance([seq, rnd], now=5.0)
+    assert moves, "expected at least one move"
+    assert all(d is seq and t is rnd for d, t, _ in moves)
+    assert rnd.quota > q_before
+    assert seq.quota >= CFG.min_share
+
+
+def test_rebalancer_seed_for_newcomer():
+    c = UnifiedCache(256 * MB, CFG)
+    fat = mk_cmu(c, ("s",), Pattern.SEQUENTIAL)
+    fat.set_quota(128 * MB)
+    new = c.create_cmu(("n",), dataset_bytes=32 * MB, now=0.0)
+    new.set_quota(0)
+    Rebalancer(CFG).seed(new, [fat, new])
+    assert new.quota >= CFG.min_share
+
+
+def test_buffer_window_bounds():
+    bw = BufferWindow(4)
+    for i in range(10):
+        bw.on_evict(f"k{i}")
+    assert len(bw._ghost) == 4
+    assert bw.probe("k9") and not bw.probe("k0")
+
+
+def test_quiver_and_fluid_allocators():
+    c = UnifiedCache(256 * MB, CFG)
+    rnd = mk_cmu(c, ("r",), Pattern.RANDOM, dataset=128 * MB)
+    skw = mk_cmu(c, ("k",), Pattern.SKEWED, ghost_hits=10)
+    QuiverAllocator(CFG).rebalance([rnd, skw], now=1.0, capacity=128 * MB)
+    assert rnd.quota >= CFG.min_share and skw.quota >= CFG.min_share
+    FluidAllocator(CFG).rebalance([rnd, skw], now=2.0, capacity=128 * MB)
+    assert rnd.quota >= CFG.min_share and skw.quota >= CFG.min_share

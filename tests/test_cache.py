@@ -1,0 +1,102 @@
+"""UnifiedCache / CacheManageUnit space-isolation invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import CacheManageUnit, UnifiedCache, block_key
+from repro.core.types import CacheConfig, Pattern
+
+MB = 1 << 20
+CFG = CacheConfig(min_share=4 * MB, rebalance_quantum=4 * MB, block_size=MB)
+
+
+def mk_cache(capacity=64 * MB):
+    return UnifiedCache(capacity, CFG)
+
+
+def test_quota_partition_invariant_on_create():
+    c = mk_cache()
+    c.create_cmu(("a",), dataset_bytes=100 * MB, now=0.0)
+    c.create_cmu(("b",), dataset_bytes=10 * MB, now=1.0)
+    assert sum(x.quota for x in c.cmus.values()) <= c.capacity
+    assert all(x.quota >= 0 for x in c.cmus.values())
+
+
+def test_cmu_used_never_exceeds_quota():
+    c = mk_cache()
+    cmu = c.create_cmu(("a",), dataset_bytes=100 * MB, now=0.0)
+    sub = cmu.substream(("a",), Pattern.SKEWED)
+    for i in range(100):
+        c.insert(("a", f"f{i}", "#0"), MB, cmu, sub)
+        assert cmu.used <= cmu.quota
+    assert cmu.used <= cmu.quota
+
+
+def test_uniform_stops_admitting():
+    c = mk_cache(capacity=16 * MB)
+    cmu = c.create_cmu(("a",), dataset_bytes=100 * MB, now=0.0)
+    sub = cmu.substream(("a",), Pattern.RANDOM)
+    admitted = sum(
+        c.insert(("a", f"f{i}", "#0"), MB, cmu, sub) for i in range(50))
+    assert admitted == cmu.quota // MB            # pinned then refused
+    assert cmu.used == admitted * MB
+
+
+def test_quota_shrink_forces_eviction():
+    c = mk_cache()
+    cmu = c.create_cmu(("a",), dataset_bytes=100 * MB, now=0.0)
+    sub = cmu.substream(("a",), Pattern.SKEWED)
+    for i in range(int(cmu.quota // MB)):
+        c.insert(("a", f"f{i}", "#0"), MB, cmu, sub)
+    before = cmu.used
+    cmu.set_quota(cmu.quota // 2)
+    assert cmu.used <= cmu.quota
+    assert cmu.used < before
+
+
+def test_migration_on_cmu_creation():
+    c = mk_cache()
+    d = c.default_cmu
+    sub = d.substream(("x",), Pattern.UNKNOWN)
+    key_path = ("x", "f1", "#0")
+    assert c.insert(key_path, MB, d, sub)
+    cmu = c.create_cmu(("x",), dataset_bytes=10 * MB, now=0.0)
+    assert c.resident(block_key(key_path))
+    assert cmu.resident(block_key(key_path))
+    assert not d.resident(block_key(key_path))
+    assert cmu.used == MB
+
+
+def test_remove_cmu_adopts_blocks():
+    c = mk_cache()
+    cmu = c.create_cmu(("a",), dataset_bytes=10 * MB, now=0.0)
+    sub = cmu.substream(("a",), Pattern.SKEWED)
+    c.insert(("a", "f", "#0"), MB, cmu, sub)
+    q = cmu.quota
+    c.remove_cmu(("a",))
+    assert ("a",) not in c.cmus
+    assert c.resident("a/f/#0")                  # adopted, not dropped
+    assert c.default_cmu.resident("a/f/#0")
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 40)),
+                max_size=250))
+@settings(max_examples=40, deadline=None)
+def test_global_residency_consistency(ops):
+    """Random inserts across streams: every resident block belongs to exactly
+    one CMU; global used == sum of CMU used; quotas partition capacity."""
+    c = mk_cache(capacity=32 * MB)
+    cmus = {}
+    for ds, i in ops:
+        root = (f"ds{ds}",)
+        if root not in cmus:
+            cmus[root] = c.create_cmu(root, dataset_bytes=64 * MB,
+                                      now=float(i))
+        cmu = cmus[root]
+        sub = cmu.substream(root, Pattern.SKEWED)
+        c.insert(root + (f"f{i}", "#0"), MB, cmu, sub)
+    assert sum(x.quota for x in c.cmus.values()) <= c.capacity
+    total_used = sum(x.used for x in c.cmus.values())
+    assert total_used == sum(sz for sz, _ in c.blocks.values())
+    assert total_used <= c.capacity
+    for key, (sz, cmu) in c.blocks.items():
+        assert cmu.resident(key)

@@ -1,0 +1,127 @@
+"""End-to-end IGTCache engine behaviour on controlled access streams."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, IGTCache, Pattern, bundle
+from repro.core.types import MB
+from repro.storage import RemoteStore, make_dataset
+
+CFG = CacheConfig(min_share=16 * MB, rebalance_quantum=16 * MB,
+                  rebalance_period=5.0,
+                  prefetch_budget_bytes=64 * MB)
+
+
+def mk_store():
+    store = RemoteStore()
+    store.add(make_dataset("seqset", "flat_files", n_files=800,
+                           small_file_size=256 * 1024))
+    store.add(make_dataset("randset", "dir_tree", n_dirs=40, files_per_dir=20,
+                           small_file_size=256 * 1024))
+    store.add(make_dataset("bigfiles", "big_files", n_files=60,
+                           file_size=16 * MB))
+    return store
+
+
+def drain(eng, out, t):
+    for p, s in out.prefetches:
+        eng.complete_prefetch(p, s, t)
+
+
+def test_sequential_stream_prefetch_hits():
+    store = mk_store()
+    eng = IGTCache(store, 256 * MB, cfg=CFG)
+    ds = store.datasets["seqset"]
+    t = 0.0
+    for f in ds.files:
+        out = eng.read(f.path, 0, f.size, t)
+        drain(eng, out, t)
+        t += 0.05
+    anchor = eng.tree.shallowest_non_trivial(ds.files[0].path)
+    assert anchor.pattern.pattern is Pattern.SEQUENTIAL
+    s = eng.snapshot()
+    # after the 100-access window everything should be prefetched ahead
+    assert s["hit_ratio"] > 0.7
+    assert s["prefetch_hits"] > 500
+
+
+def test_random_stream_uniform_and_statistical_prefetch():
+    store = mk_store()
+    eng = IGTCache(store, 512 * MB, cfg=CFG)   # dataset 200MB fits
+    ds = store.datasets["randset"]
+    files = list(ds.files)
+    rng = random.Random(0)
+    t = 0.0
+    for epoch in range(2):
+        order = list(range(len(files)))
+        rng.shuffle(order)
+        for i in order:
+            out = eng.read(files[i].path, 0, files[i].size, t)
+            drain(eng, out, t)
+            t += 0.01
+    cmu = eng.cache.cmus.get(("randset",))
+    assert cmu is not None
+    assert cmu.effective_pattern() is Pattern.RANDOM
+    assert eng.snapshot()["hit_ratio"] > 0.8     # stat prefetch + pinning
+
+
+def test_skewed_stream_lru():
+    store = mk_store()
+    eng = IGTCache(store, 64 * MB, cfg=CFG)
+    ds = store.datasets["randset"]
+    files = list(ds.files)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(files))
+    t = 0.0
+    for _ in range(3000):
+        i = int(perm[(rng.zipf(1.4) - 1) % len(files)])
+        out = eng.read(files[i].path, 0, files[i].size, t)
+        drain(eng, out, t)
+        t += 0.01
+    cmu = eng.cache.cmus.get(("randset",))
+    assert cmu.effective_pattern() is Pattern.SKEWED
+    assert eng.snapshot()["hit_ratio"] > 0.6
+
+
+def test_block_level_readahead_big_files():
+    store = mk_store()
+    eng = IGTCache(store, 256 * MB, cfg=CFG)
+    ds = store.datasets["bigfiles"]
+    t = 0.0
+    bs = CFG.block_size
+    for f in ds.files:
+        for b in range(f.size // bs):
+            out = eng.read(f.path, b * bs, bs, t)
+            drain(eng, out, t)
+            t += 0.02
+    # ~100-access warm-up window misses; the rest should be prefetched
+    assert eng.snapshot()["hit_ratio"] > 0.4
+    assert eng.stats.prefetch_hits > 80
+
+
+def test_baseline_bundles_differ():
+    store = mk_store()
+    ds = store.datasets["seqset"]
+
+    def run(name):
+        eng = IGTCache(store, 128 * MB, cfg=CFG, options=bundle(name))
+        t = 0.0
+        for f in ds.files:
+            out = eng.read(f.path, 0, f.size, t)
+            drain(eng, out, t)
+            t += 0.05
+        return eng.snapshot()["hit_ratio"]
+
+    igt = run("igtcache")
+    none = run("prefetch_none")
+    assert igt > none + 0.3     # file-level prefetch vs nothing
+
+
+def test_no_cache_capacity_zero():
+    store = mk_store()
+    eng = IGTCache(store, 0, cfg=CFG, options=bundle("prefetch_none"))
+    ds = store.datasets["seqset"]
+    for i, f in enumerate(ds.files[:200]):
+        eng.read(f.path, 0, f.size, float(i))
+    assert eng.snapshot()["hit_ratio"] == 0.0

@@ -1,0 +1,81 @@
+"""User pin/never-cache controls (§3.3 footnote 8) + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, IGTCache
+from repro.core.types import MB
+from repro.storage import RemoteStore, make_dataset
+from repro.train.optimizer import (AdamWConfig, apply_updates, compress_grads,
+                                   init_state)
+
+CFG = CacheConfig(min_share=4 * MB, rebalance_quantum=4 * MB)
+
+
+def mk():
+    store = RemoteStore()
+    store.add(make_dataset("a", "flat_files", n_files=100,
+                           small_file_size=256 * 1024))
+    store.add(make_dataset("b", "flat_files", n_files=100,
+                           small_file_size=256 * 1024))
+    return store
+
+
+def test_never_cache_passes_through():
+    store = mk()
+    eng = IGTCache(store, 64 * MB, cfg=CFG)
+    eng.never_cache(("b",))
+    fa = store.datasets["a"].files[0]
+    fb = store.datasets["b"].files[0]
+    for t in range(3):
+        eng.read(fa.path, 0, fa.size, float(t))
+        eng.read(fb.path, 0, fb.size, float(t) + 0.5)
+    from repro.core import block_key
+    assert eng.cache.resident(block_key(fa.path + ("#0",)))
+    assert not eng.cache.resident(block_key(fb.path + ("#0",)))
+
+
+def test_pin_exempts_from_ttl():
+    store = mk()
+    eng = IGTCache(store, 8 * MB, cfg=CFG)   # tight: pressure for TTL
+    eng.pin(("a", "files"))
+    import random
+    rng = random.Random(0)
+    files = store.datasets["a"].files
+    t = 0.0
+    for _ in range(300):
+        f = files[rng.randrange(len(files))]
+        eng.read(f.path, 0, f.size, t)
+        t += 0.1
+    cmu_path = next((p for p in eng.cache.cmus if p[0] == "a"), None)
+    assert cmu_path is not None
+    # long idle + pressure from the other dataset
+    fb = store.datasets["b"].files
+    for i in range(200):
+        eng.read(fb[i % len(fb)].path, 0, fb[0].size, t)
+        t += 1.0
+    eng.tick(t + 1000.0)
+    assert cmu_path in eng.cache.cmus        # pinned stream survives TTL
+
+
+def test_int8_compression_error_bound():
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(256, 64)), jnp.float32) * 0.01}
+    out = compress_grads(grads, "int8")
+    rel = float(jnp.max(jnp.abs(out["w"] - grads["w"])) /
+                jnp.max(jnp.abs(grads["w"])))
+    assert rel < 1.0 / 127 + 1e-6            # absmax-int8 bound
+
+
+def test_training_with_compression_converges():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0, grad_clip=10.0,
+                      grad_compression="int8")
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_state(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = apply_updates(grads=grads, params=params,
+                                         state=state, cfg=cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2

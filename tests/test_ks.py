@@ -1,0 +1,75 @@
+"""K-S machinery vs scipy + analytical properties."""
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import stats
+
+from repro.core.ks import (ecdf_ks_statistic, ks_critical, ks_test_random,
+                           normal_quantile, triangular_cdf)
+
+
+def test_triangular_cdf_matches_pmf_sum():
+    c = 50
+    pmf = [2 * (c - k) / (c * (c - 1)) for k in range(1, c)]
+    assert math.isclose(sum(pmf), 1.0, rel_tol=1e-9)
+    acc = 0.0
+    for k in range(1, c):
+        acc += pmf[k - 1]
+        assert math.isclose(triangular_cdf(k, c), acc, rel_tol=1e-9)
+    assert triangular_cdf(0, c) == 0.0
+    assert triangular_cdf(c + 5, c) == pytest.approx(1.0)
+
+
+@given(st.lists(st.floats(0, 1000, allow_nan=False), min_size=5, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_ks_statistic_matches_scipy_uniform(samples):
+    hi = max(samples) + 1.0
+    cdf = lambda x: min(1.0, max(0.0, x / hi))
+    ours = ecdf_ks_statistic(samples, cdf)
+    ref = stats.ks_1samp(samples, lambda x: np.clip(np.asarray(x) / hi, 0, 1),
+                         alternative="two-sided").statistic
+    assert ours == pytest.approx(float(ref), abs=1e-9)
+
+
+def test_ks_critical_close_to_scipy():
+    for n in (20, 50, 100, 500):
+        for alpha in (0.01, 0.05):
+            exact = stats.ksone.isf(alpha / 2, n)  # two-sided approx
+            assert ks_critical(n, alpha) == pytest.approx(exact, rel=0.05)
+
+
+def test_random_permutation_gaps_accepted():
+    rng = random.Random(0)
+    c = 5000
+    accept = 0
+    trials = 50
+    for t in range(trials):
+        perm = list(range(c))
+        rng.shuffle(perm)
+        window = perm[:101]
+        gaps = [abs(window[i] - window[i - 1]) for i in range(1, len(window))]
+        ok, d, da = ks_test_random(gaps, c, alpha=0.01)
+        accept += ok
+    assert accept >= 0.9 * trials  # ~1 - alpha
+
+
+def test_zipf_clustered_gaps_rejected():
+    rng = np.random.default_rng(0)
+    c = 5000
+    reject = 0
+    trials = 30
+    for t in range(trials):
+        idx = np.minimum((rng.zipf(1.5, 101) - 1) * 7, c - 1)  # clustered hot
+        gaps = np.abs(np.diff(idx))
+        ok, _, _ = ks_test_random(list(gaps), c, alpha=0.01)
+        reject += not ok
+    assert reject >= 0.8 * trials
+
+
+def test_normal_quantile():
+    for p, z in [(0.5, 0.0), (0.975, 1.959964), (0.99, 2.326348),
+                 (0.01, -2.326348)]:
+        assert normal_quantile(p) == pytest.approx(z, abs=1e-5)

@@ -1,0 +1,87 @@
+"""Pattern recognition: the three behaviours the cache must distinguish."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pattern import classify, detect_sequential, distinct_deficit, fit_adaptive_ttl
+from repro.core.types import AccessRecord, CacheConfig, Pattern
+
+CFG = CacheConfig()
+
+
+def recs(indices, total, dt=0.1):
+    return [AccessRecord(int(i), total, t * dt, str(int(i)))
+            for t, i in enumerate(indices)]
+
+
+def test_sequential_unit_stride():
+    r = recs(range(100), 1000)
+    assert classify(r, 1000, CFG).pattern is Pattern.SEQUENTIAL
+
+
+def test_sequential_with_zero_runs():
+    # coarse level: long runs of the same child then +1 (dir traversal)
+    idx = [i // 10 for i in range(100)]
+    r = recs(idx, 50)
+    assert classify(r, 50, CFG).pattern is Pattern.SEQUENTIAL
+
+
+def test_random_permutation():
+    rng = random.Random(1)
+    hits = 0
+    for t in range(20):
+        perm = list(range(2000))
+        rng.shuffle(perm)
+        r = recs(perm[:100], 2000)
+        hits += classify(r, 2000, CFG).pattern is Pattern.RANDOM
+    assert hits >= 18
+
+
+def test_skewed_zipf_scattered():
+    # hot items scattered in index space: caught by the distinct screen
+    rng = np.random.default_rng(2)
+    hits = 0
+    for t in range(20):
+        perm = rng.permutation(2000)
+        idx = perm[(rng.zipf(1.3, 100) - 1) % 2000]
+        r = recs(idx, 2000)
+        hits += classify(r, 2000, CFG).pattern is Pattern.SKEWED
+    assert hits >= 18
+
+
+def test_skewed_zipf_clustered():
+    rng = np.random.default_rng(3)
+    idx = np.minimum((rng.zipf(1.4, 100) - 1) * 3, 1999)
+    r = recs(idx, 2000)
+    assert classify(r, 2000, CFG).pattern is Pattern.SKEWED
+
+
+@given(st.integers(200, 5000), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_random_detection_property(c, seed):
+    rng = random.Random(seed)
+    perm = list(range(c))
+    rng.shuffle(perm)
+    r = recs(perm[:100], c)
+    # permutations must never be classified sequential
+    assert classify(r, c, CFG).pattern is not Pattern.SEQUENTIAL
+
+
+def test_distinct_deficit_direction():
+    uniform = list(np.random.default_rng(0).integers(0, 1000, 100))
+    hot = [1, 2, 3, 4] * 25
+    assert distinct_deficit(uniform, 1000) < 3.0
+    assert distinct_deficit(hot, 1000) > 10.0
+
+
+def test_adaptive_ttl():
+    times = [i * 1.0 for i in range(100)]       # 1s gaps, sigma ~0
+    ttl = fit_adaptive_ttl(times, CFG)
+    assert ttl is not None
+    assert CFG.ttl_base + 1.0 <= ttl <= CFG.ttl_base + 2.0
+
+
+def test_ttl_needs_samples():
+    assert fit_adaptive_ttl([1.0], CFG) is None

@@ -1,0 +1,83 @@
+"""Cluster simulator: timing semantics, single-flight, baseline ordering."""
+import pytest
+
+from repro.core import CacheConfig, IGTCache, bundle
+from repro.core.types import MB
+from repro.sim import ClusterSim, SharedLink, make_paper_suite
+from repro.storage import RemoteStore
+
+
+def scaled_cfg(capacity):
+    share = max(16 * MB, capacity // 128)
+    return CacheConfig(min_share=share, rebalance_quantum=share,
+                       rebalance_period=10.0,
+                       prefetch_budget_bytes=max(64 * MB, capacity // 8))
+
+
+def test_link_priority_and_latency():
+    link = SharedLink(bandwidth_Bps=100.0, latency_s=1.0)
+    got = []
+    link.enqueue(100, "bg", demand=False, callback=None)
+    link.enqueue(100, "demand", demand=True, callback=None)
+    finish, t = link.pump(0.0)
+    got.append(t.key)
+    assert finish == pytest.approx(2.0)     # 1s busy + 1s latency
+    finish2, t2 = link.pump(link.free_at)
+    got.append(t2.key)
+    assert got == ["demand", "bg"]
+
+
+def test_link_promote():
+    link = SharedLink(100.0, 0.0)
+    link.enqueue(100, "a", demand=False, callback=("x", 1))
+    assert link.promote("a")
+    finish, t = link.pump(0.0)
+    assert t.demand and t.key == "a"
+
+
+def _run(bundle_name, suite, store, cap):
+    eng = IGTCache(store, cap, cfg=scaled_cfg(cap),
+                   options=bundle(bundle_name))
+    return ClusterSim(suite, eng).run()
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    suite = make_paper_suite(scale=0.15, seed=0, job_filter=[2, 8, 9, 16])
+    store = RemoteStore()
+    for ds in suite.datasets.values():
+        store.add(ds)
+    cap = int(0.35 * suite.total_bytes())
+    return suite, store, cap
+
+
+def test_sim_deterministic(small_world):
+    suite, store, cap = small_world
+    r1 = _run("igtcache", suite, store, cap)
+    r2 = _run("igtcache", suite, store, cap)
+    assert r1.jct == r2.jct
+    assert r1.hit_ratio == r2.hit_ratio
+
+
+def test_cache_beats_nocache(small_world):
+    suite, store, cap = small_world
+    with_cache = _run("juicefs", suite, store, cap)
+    eng = IGTCache(store, 0, cfg=scaled_cfg(cap),
+                   options=bundle("prefetch_none"))
+    no_cache = ClusterSim(suite, eng).run()
+    assert with_cache.avg_jct < no_cache.avg_jct
+    assert with_cache.hit_ratio > 0.2
+
+
+def test_igt_beats_juicefs_on_chr(small_world):
+    suite, store, cap = small_world
+    igt = _run("igtcache", suite, store, cap)
+    jfs = _run("juicefs", suite, store, cap)
+    assert igt.hit_ratio > jfs.hit_ratio
+
+
+def test_all_jobs_finish(small_world):
+    suite, store, cap = small_world
+    res = _run("igtcache", suite, store, cap)
+    assert set(res.jct) == {j.job_id for j in suite.jobs}
+    assert all(v > 0 for v in res.jct.values())

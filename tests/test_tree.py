@@ -1,0 +1,84 @@
+"""AccessStreamTree: structure, compression, pruning, node cap."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.access_stream_tree import AccessStreamTree
+from repro.core.types import CacheConfig, Pattern
+
+
+def levels_for(ds, dirname, fname, nfiles_per_dir, ndirs, blocks=1, blk=0):
+    return [(ds, 0, 5), (dirname, int(dirname), ndirs),
+            (fname, int(fname), nfiles_per_dir), (f"#{blk}", blk, blocks)]
+
+
+def test_observe_creates_informative_nodes_only():
+    t = AccessStreamTree(CacheConfig(window=10))
+    # flat small-file dataset: file level informative, block level trivial
+    for i in range(30):
+        t.observe([("ds", 0, 3), ("files", 0, 1), (f"f{i}", i, 100),
+                   ("#0", 0, 1)], time=float(i))
+    files_node = t.find(("ds", "files"))
+    assert files_node is not None
+    assert files_node.accesses == 30
+    # no node materialized below the file level (1-block files)
+    assert not files_node.children or all(
+        not c.children for c in files_node.children.values())
+    # single-entry "files" level recorded nothing at the ds node
+    ds_node = t.find(("ds",))
+    assert ds_node.accesses == 0
+
+
+def test_child_pruning_bounds_children():
+    cfg = CacheConfig(window=16)
+    t = AccessStreamTree(cfg)
+    for i in range(200):
+        t.observe([("ds", 0, 2), (f"f{i}", i, 500), ("#0", 0, 4)],
+                  time=float(i))
+    node = t.find(("ds",))
+    assert len(node.children) <= cfg.window
+
+
+def test_node_cap():
+    cfg = CacheConfig(window=8, node_cap=50)
+    t = AccessStreamTree(cfg)
+    for i in range(1000):
+        t.observe([(f"d{i % 100}", i % 100, 100), (f"f{i}", i % 37, 37),
+                   ("#0", 0, 2)], time=float(i))
+    assert t.node_count() <= cfg.node_cap
+
+
+def test_pattern_at_dir_level():
+    cfg = CacheConfig(window=50)
+    t = AccessStreamTree(cfg)
+    # sequential dir traversal, one file per dir (ICOADS shape)
+    for d in range(100):
+        t.observe([("ds", 0, 2), (f"{d:04d}", d, 200), ("03.csv", 3, 10),
+                   ("#0", 0, 1)], time=float(d))
+    ds = t.find(("ds",))
+    assert ds.pattern.pattern is Pattern.SEQUENTIAL
+    anchor = t.shallowest_non_trivial(("ds", "0050", "03.csv"))
+    assert anchor is ds
+
+
+@given(st.lists(st.tuples(st.integers(0, 30), st.integers(0, 20)),
+                min_size=1, max_size=300))
+@settings(max_examples=30, deadline=None)
+def test_tree_invariants_random_traffic(accesses):
+    cfg = CacheConfig(window=10, node_cap=40)
+    t = AccessStreamTree(cfg)
+    for i, (d, f) in enumerate(accesses):
+        t.observe([("ds", 0, 1), (f"d{d}", d, 31), (f"f{f}", f, 21),
+                   ("#0", 0, 1)], time=float(i))
+    assert t.node_count() <= cfg.node_cap
+    # every registered node reachable from root
+    for node in t.iter_nodes():
+        cur = t.root
+        ok = True
+        for comp in node.path:
+            cur = cur.children.get(comp)
+            if cur is None:
+                ok = False
+                break
+        assert ok, f"unreachable node {node.path}"

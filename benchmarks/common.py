@@ -1,11 +1,14 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+sys.path.insert(0, str(REPO_ROOT / "src"))
 
 from repro.core import CacheConfig, IGTCache, bundle  # noqa: E402
 from repro.core.types import MB  # noqa: E402
@@ -48,3 +51,16 @@ def csv_row(name: str, value, derived: str = "") -> str:
     line = f"{name},{value},{derived}"
     print(line, flush=True)
     return line
+
+
+def emit_json(name: str, payload: dict, path=None) -> Path:
+    """Persist one benchmark's results as BENCH_<name>.json at the repo root
+    so the perf trajectory is tracked across PRs (each PR overwrites its
+    bench file; git history keeps the trajectory)."""
+    out = Path(path) if path is not None else REPO_ROOT / f"BENCH_{name}.json"
+    record = dict(payload)
+    record.setdefault("bench", name)
+    record.setdefault("generated_unix", round(time.time(), 1))
+    out.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] wrote {out}", flush=True)
+    return out

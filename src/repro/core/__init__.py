@@ -4,19 +4,23 @@ A unified, pattern/granularity-adaptive cache for heterogeneous AI workloads:
 AccessStreamTree (§3.1) + K-S hypothesis-test pattern recognition (§3.2) +
 adaptive prefetch/eviction/allocation (§3.3).
 """
-from .access_stream_tree import AccessStream, AccessStreamTree
+from .access_stream_tree import (AccessStream, AccessStreamTree,
+                                 ObservedChain, analyze_streams)
 from .baselines import BUNDLES, bundle
 from .cache import CacheManageUnit, UnifiedCache, block_key
 from .igtcache import EngineOptions, IGTCache, ReadOutcome, informative_depth
 from .ks import ks_critical, ks_test_random, triangular_cdf
-from .pattern import PatternResult, classify, detect_sequential, fit_adaptive_ttl
+from .meta import LevelCache
+from .pattern import (PatternResult, classify, classify_batch,
+                      detect_sequential, fit_adaptive_ttl)
 from .types import AccessRecord, CacheConfig, CacheStats, GB, MB, PathT, Pattern
 
 __all__ = [
     "AccessRecord", "AccessStream", "AccessStreamTree", "BUNDLES",
     "CacheConfig", "CacheManageUnit", "CacheStats", "EngineOptions", "GB",
-    "IGTCache", "MB", "PathT", "Pattern", "PatternResult", "ReadOutcome",
-    "UnifiedCache", "block_key", "bundle", "classify", "detect_sequential",
+    "IGTCache", "LevelCache", "MB", "ObservedChain", "PathT", "Pattern",
+    "PatternResult", "ReadOutcome", "UnifiedCache", "analyze_streams",
+    "block_key", "bundle", "classify", "classify_batch", "detect_sequential",
     "fit_adaptive_ttl", "informative_depth", "ks_critical", "ks_test_random",
     "triangular_cdf",
 ]

@@ -19,6 +19,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .allocation import BufferWindow
 from .eviction import (ARC, EagerEviction, EvictionPolicy, LRU, UniformCache,
                        make_policy)
@@ -91,22 +93,38 @@ class CacheManageUnit:
         self.max_gap = 0.0  # largest inter-access gap seen (stall guard)
         # Dataset-granularity pattern analysis over the *flattened* global
         # block index (catches skew spread across few big files, which
-        # per-level gap analysis fragments).
-        self._flat_records: deque = deque(maxlen=cfg.window)
+        # per-level gap analysis fragments).  Ring buffer (plain list, made
+        # an ndarray only at analysis): note_flat() runs once per block on
+        # the hot path.
+        self._flat_idx: List[int] = [0] * cfg.window
+        self._flat_pos = 0
+        self._flat_count = 0
         self.flat_pattern = Pattern.UNKNOWN
         self._flat_seen = 0
         self._flat_analyzed_at = 0
+        self._flat_total = 0
+        # _make_room is a pure function of the CMU's residency/policy state;
+        # cache a failed verdict until that state changes (a full uniform
+        # stream would otherwise walk the whole eviction ladder on every
+        # miss).  Bumped by _evict, successful admits, quota changes and
+        # substream creation/switches.
+        self._mutations = 0
+        self._no_room_at = -1
+        self._no_room_sub: Optional[SubStream] = None
 
     # -- substream plumbing ---------------------------------------------------
     def substream(self, node_path: PathT, pattern: Pattern) -> SubStream:
         sub = self.substreams.get(node_path)
-        cap_blocks = max(1, self.quota // self.cfg.block_size)
         if sub is None:
+            cap_blocks = max(1, self.quota // self.cfg.block_size)
             sub = SubStream(node_path, pattern,
                             make_policy(PATTERN_POLICY[pattern], cap_blocks))
             self.substreams[node_path] = sub
+            self._mutations += 1
         elif sub.pattern is not pattern:
+            cap_blocks = max(1, self.quota // self.cfg.block_size)
             sub.switch_pattern(pattern, cap_blocks)
+            self._mutations += 1
             if pattern is Pattern.RANDOM:
                 self.stat_prefetch_done = False
         return sub
@@ -125,21 +143,31 @@ class CacheManageUnit:
 
     def note_flat(self, ordinal: int, total: int, now: float) -> Pattern:
         """Record the flattened block ordinal and (re)classify the stream at
-        dataset granularity."""
-        from .pattern import classify
-        from .types import AccessRecord
-        self._flat_records.append(
-            AccessRecord(index=ordinal, total=total, time=now,
-                         child_key=str(ordinal)))
+        dataset granularity (vectorized over the ring-buffer window)."""
+        pos = self._flat_pos
+        w = self.cfg.window
+        self._flat_idx[pos] = ordinal
+        self._flat_pos = 0 if pos + 1 == w else pos + 1
+        if self._flat_count < w:
+            self._flat_count += 1
+        self._flat_total = total
         self._flat_seen += 1
-        if (self._flat_seen >= self.cfg.window
+        if (self._flat_seen >= w
                 and (self.flat_pattern is Pattern.UNKNOWN
                      or self._flat_seen - self._flat_analyzed_at
                      >= self.cfg.reanalyze_every)):
+            from .pattern import classify_batch
             self._flat_analyzed_at = self._flat_seen
-            res = classify(list(self._flat_records), total, self.cfg)
+            res = classify_batch([(self.flat_window(), total)], self.cfg)[0]
             self.flat_pattern = res.pattern
         return self.flat_pattern
+
+    def flat_window(self) -> np.ndarray:
+        """Chronological flattened-index window (fresh ndarray)."""
+        from .access_stream_tree import ring_chrono
+        return np.array(ring_chrono(self._flat_idx, self._flat_pos,
+                                    self._flat_count, self.cfg.window),
+                        dtype=np.int64)
 
     def effective_ttl(self) -> Optional[float]:
         """Fitted TTL, guarded against recurring I/O stalls: a stream that
@@ -203,13 +231,19 @@ class CacheManageUnit:
             return False
         if not sub.policy.admit(key):
             return False
-        while self.used + size > self.quota:
-            if not self._make_room(sub):
-                return False
+        if self.used + size > self.quota:
+            if self._no_room_at == self._mutations and self._no_room_sub is sub:
+                return False    # nothing changed since the last failed search
+            while self.used + size > self.quota:
+                if not self._make_room(sub):
+                    self._no_room_at = self._mutations
+                    self._no_room_sub = sub
+                    return False
         sub.blocks[key] = size
         sub.policy.record_insert(key)
         self.block_sub[key] = sub
         self.used += size
+        self._mutations += 1
         return True
 
     def _make_room(self, requester: SubStream) -> bool:
@@ -240,6 +274,7 @@ class CacheManageUnit:
         sub.policy.record_remove(key)
         self.block_sub.pop(key, None)
         self.used -= size
+        self._mutations += 1
         if ghost:
             self.buffer_window.on_evict(key)
         self._on_evict(key, size)
@@ -248,6 +283,7 @@ class CacheManageUnit:
     def set_quota(self, quota: int) -> None:
         grew = quota > self.quota
         self.quota = max(0, quota)
+        self._mutations += 1
         if grew:
             # §4: on a size change, refresh pattern-derived decisions.
             self.stat_prefetch_done = False
@@ -306,6 +342,9 @@ class UnifiedCache:
         self.stats = CacheStats()
         self.blocks: Dict[BlockKey, Tuple[int, CacheManageUnit]] = {}
         self.cmus: Dict[PathT, CacheManageUnit] = {}
+        # bumped whenever the CMU registry changes; read-path caches of
+        # path→CMU resolutions key their validity on it (§4 batched read)
+        self.cmu_gen = 0
         self.default_cmu = CacheManageUnit(
             self.DEFAULT, capacity, self.cfg,
             on_evict=self._cmu_evicted, dataset_bytes=0)
@@ -363,6 +402,9 @@ class UnifiedCache:
             cmu.used += size
             self.blocks[key] = (size, cmu)
             moved_bytes += size
+        if moved_bytes:
+            default._mutations += 1
+            cmu._mutations += 1
         slack = max(0, default.quota - default.used)  # post-move slack
         n_cmus = len(self.cmus)  # includes default
         desired = max(self.cfg.min_share, moved_bytes,
@@ -374,6 +416,7 @@ class UnifiedCache:
         default.set_quota(default.quota - grant)
         cmu.set_quota(grant)
         self.cmus[root_path] = cmu
+        self.cmu_gen += 1
         return cmu
 
     def remove_cmu(self, root_path: PathT, transfer: bool = True) -> None:
@@ -388,6 +431,7 @@ class UnifiedCache:
         cmu = self.cmus.pop(root_path, None)
         if cmu is None or cmu is self.default_cmu:
             return
+        self.cmu_gen += 1
         default = self.default_cmu
         default.set_quota(default.quota + cmu.quota)
         if transfer:
@@ -400,6 +444,7 @@ class UnifiedCache:
                     default.used += size
                     self.blocks[key] = (size, default)
                 sub.blocks.clear()
+                default._mutations += 1
         else:
             cmu.evict_all()
         # default may now be over quota if capacity shrank elsewhere
@@ -408,7 +453,11 @@ class UnifiedCache:
     # -- residency transitions -----------------------------------------------------
     def insert(self, path: PathT, size: int, cmu: CacheManageUnit,
                sub: SubStream) -> bool:
-        key = block_key(path)
+        return self.insert_key(block_key(path), size, cmu, sub)
+
+    def insert_key(self, key: BlockKey, size: int, cmu: CacheManageUnit,
+                   sub: SubStream) -> bool:
+        """Hot-path insert for callers that already hold the block key."""
         ok = cmu.admit(key, size, sub)
         if ok:
             self.blocks[key] = (size, cmu)

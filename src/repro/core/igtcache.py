@@ -11,21 +11,37 @@ time and bandwidth: it fetches misses/prefetches and calls
 ``complete_prefetch`` when background bytes land.  This keeps the engine a
 pure, deterministic state machine — the property-test surface.
 
+Hot-path architecture (§4 overhead claim, Fig. 17):
+
+  * ``read()`` is the *batched extent path*: the root→leaf level resolution
+    is memoized per directory (``meta.LevelCache``), the tree walk is built
+    once per file as a replayable ``ObservedChain`` and every block of the
+    extent is observed by replaying it (no dict-walk), routing reuses the
+    chain nodes instead of re-walking the tree, and ``tick()`` runs once per
+    read instead of once per block;
+  * ``read_serial()`` is the per-block reference path kept for
+    cross-checking — tests/test_equivalence.py asserts both paths produce
+    identical ReadOutcomes, stats and tree state on seeded mixed traces;
+  * pattern analysis is vectorized: every observation window due for
+    (re)classification is pushed through ``pattern.classify_batch`` in one
+    matrix pass (K-S statistic, distinct-deficit z, sequential screen).
+
 Baselines (§5) are the same engine with adaptivity switched off via
 ``EngineOptions`` — e.g. JuiceFS ≈ enhanced-stride readahead + one global LRU
 pool + fixed TTL; see ``baselines.py`` for the named bundles.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict, defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from .access_stream_tree import AccessStream, AccessStreamTree
+from .access_stream_tree import (AccessStream, AccessStreamTree,
+                                 ObservedChain, analyze_streams)
 from .allocation import FluidAllocator, QuiverAllocator, Rebalancer
 from .cache import (CacheManageUnit, SubStream, UnifiedCache, block_key)
 from .eviction import EagerEviction
-from .meta import StoreMeta
+from .meta import LevelCache, StoreMeta
 from .prefetch import (block_sequential_candidates, sequential_candidates,
                        statistical_candidates)
 from .types import CacheConfig, CacheStats, PathT, Pattern
@@ -43,18 +59,37 @@ class EngineOptions:
     name: str = "igtcache"
 
 
-@dataclass
 class BlockResult:
-    key: str
-    size: int
-    hit: bool
-    prefetched_hit: bool = False
+    """Per-block read result (slotted by hand — one is built per block on
+    the hot path)."""
+
+    __slots__ = ("key", "size", "hit", "prefetched_hit")
+
+    def __init__(self, key: str, size: int, hit: bool,
+                 prefetched_hit: bool = False) -> None:
+        self.key = key
+        self.size = size
+        self.hit = hit
+        self.prefetched_hit = prefetched_hit
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, BlockResult)
+                and self.key == other.key and self.size == other.size
+                and self.hit == other.hit
+                and self.prefetched_hit == other.prefetched_hit)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"BlockResult({self.key!r}, {self.size}, hit={self.hit}, "
+                f"pf={self.prefetched_hit})")
 
 
-@dataclass
 class ReadOutcome:
-    blocks: List[BlockResult] = field(default_factory=list)
-    prefetches: List[Tuple[PathT, int]] = field(default_factory=list)
+    __slots__ = ("blocks", "prefetches")
+
+    def __init__(self, blocks: Optional[List[BlockResult]] = None,
+                 prefetches: Optional[List[Tuple[PathT, int]]] = None) -> None:
+        self.blocks = [] if blocks is None else blocks
+        self.prefetches = [] if prefetches is None else prefetches
 
     @property
     def remote_bytes(self) -> int:
@@ -63,6 +98,70 @@ class ReadOutcome:
     @property
     def cached_bytes(self) -> int:
         return sum(b.size for b in self.blocks if b.hit)
+
+
+class _PrefixSet:
+    """Pin/ban table with O(path-depth) membership (was an O(table) scan)."""
+
+    __slots__ = ("_set", "_lens")
+
+    def __init__(self) -> None:
+        self._set: set = set()
+        self._lens: Tuple[int, ...] = ()
+
+    def add(self, prefix: PathT) -> None:
+        self._set.add(prefix)
+        self._lens = tuple(sorted({len(p) for p in self._set}))
+
+    def covers(self, path: PathT) -> bool:
+        s = self._set
+        if not s:
+            return False
+        n = len(path)
+        for length in self._lens:
+            if length > n:
+                break
+            if path[:length] in s:
+                return True
+        return False
+
+    def __len__(self) -> int:
+        return len(self._set)
+
+    def __iter__(self):
+        return iter(self._set)
+
+
+class _FileCtx:
+    """Per-file read-path context: memoized geometry + replayable chain +
+    generation-checked CMU resolution (§4 batched read path)."""
+
+    __slots__ = ("file_path", "dir_levels", "fsize", "nblocks", "key_prefix",
+                 "keys", "flat_start", "flat_total", "chain", "cmu",
+                 "cmu_gen")
+
+    _KEY_CACHE_MAX_BLOCKS = 512
+
+    def __init__(self, file_path: PathT, dir_levels, fsize: int,
+                 nblocks: int, key_prefix: str) -> None:
+        self.file_path = file_path
+        self.dir_levels = dir_levels
+        self.fsize = fsize
+        self.nblocks = nblocks
+        self.key_prefix = key_prefix
+        if nblocks <= self._KEY_CACHE_MAX_BLOCKS:
+            if key_prefix:
+                self.keys: Optional[Tuple[str, ...]] = tuple(
+                    f"{key_prefix}/#{b}" for b in range(nblocks))
+            else:
+                self.keys = tuple(f"#{b}" for b in range(nblocks))
+        else:
+            self.keys = None
+        self.flat_start = 0
+        self.flat_total = -1           # -1 = not resolved yet
+        self.chain: Optional[ObservedChain] = None
+        self.cmu: Optional[CacheManageUnit] = None
+        self.cmu_gen = -1
 
 
 class IGTCache:
@@ -75,9 +174,14 @@ class IGTCache:
         self.tree = AccessStreamTree(self.cfg)
         self.cache = UnifiedCache(capacity, self.cfg)
         self.stats = self.cache.stats
+        self._blocks = self.cache.blocks   # hot-path residency alias
         self.rebalancer = Rebalancer(self.cfg)
         self.quiver = QuiverAllocator(self.cfg)
         self.fluid = FluidAllocator(self.cfg)
+        # memoized metadata resolution + per-file read contexts (§4)
+        self.levels = LevelCache(meta)
+        self._ctx_cache: "OrderedDict[PathT, _FileCtx]" = OrderedDict()
+        self._ctx_cap = max(4 * self.cfg.node_cap, 4096)
         # prefetch bookkeeping
         self._pending_prefetch: set = set()
         self._prefetched_resident: set = set()
@@ -91,8 +195,8 @@ class IGTCache:
         self._last_ttl_sweep = 0.0
         # explicit user instructions (§3.3 footnote 8): path prefixes the
         # user pinned (never evict / never TTL) or banned (never cache)
-        self._pinned: set = set()
-        self._never_cache: set = set()
+        self._pinned = _PrefixSet()
+        self._never_cache = _PrefixSet()
 
     # -------------------------------------------------------- user controls
     def pin(self, path: PathT) -> None:
@@ -104,12 +208,88 @@ class IGTCache:
         """Never admit blocks under ``path`` (reads pass through)."""
         self._never_cache.add(path)
 
-    def _prefix_in(self, path: PathT, table: set) -> bool:
-        return any(path[:len(p)] == p for p in table)
+    def invalidate_meta_cache(self) -> None:
+        """Call if the backing store re-registers datasets mid-run."""
+        self.levels.invalidate()
+        self._ctx_cache.clear()
 
     # ------------------------------------------------------------------ read
     def read(self, file_path: PathT, offset: int, size: int,
              now: float) -> ReadOutcome:
+        """Batched extent read (§4): resolve once, observe by chain replay,
+        route from the chain, tick once."""
+        out = self._read_impl(file_path, offset, size, now)
+        if out.blocks:
+            self.tick(now)
+        return out
+
+    def _read_impl(self, file_path: PathT, offset: int, size: int,
+                   now: float) -> ReadOutcome:
+        out = ReadOutcome()
+        ctx = self._file_ctx(file_path)
+        size = max(0, min(size, ctx.fsize - offset))
+        if size == 0:
+            return out
+        bs = self.cfg.block_size
+        first, last = offset // bs, (offset + size - 1) // bs
+        chain = ctx.chain
+        ok = chain is not None
+        if ok:
+            for nd in chain.check_nodes:    # inlined chain.valid()
+                if nd.detached:
+                    ok = False
+                    break
+        if not ok:
+            chain = self.tree.build_chain(ctx.dir_levels, ctx.nblocks)
+            ctx.chain = chain
+        if not chain.valid():
+            # pathological: the build itself tripped the node cap onto this
+            # very path — fall back to the reference per-block walk
+            ctx.chain = None
+            for b in range(first, last + 1):
+                self._read_block(file_path, b, min(bs, ctx.fsize - b * bs),
+                                 now, out)
+        else:
+            tree = self.tree
+            cfg = self.cfg
+            prefix = ctx.key_prefix
+            keys = ctx.keys
+            fsize = ctx.fsize
+            due: List[AccessStream] = []
+            for b in range(first, last + 1):
+                bsize = min(bs, fsize - b * bs)
+                del due[:]
+                tree.replay_chain(chain, b, now, due)
+                if due:
+                    analyze_streams(due, cfg)
+                cmu, sub, governing = self._route_chain(ctx, chain, b, now)
+                if keys is not None:
+                    key = keys[b]
+                else:
+                    key = f"{prefix}/#{b}" if prefix else f"#{b}"
+                self._serve_block(file_path, key, bsize, cmu, sub,
+                                  governing, now, out)
+                cands = self._gen_prefetch_chain(ctx, chain, b, cmu,
+                                                 governing, now)
+                if cands:
+                    out.prefetches.extend(cands)
+        if self.options.prefetch == "sfp":
+            self._sfp_observe(file_path, out, now)
+        return out
+
+    def read_batch(self, requests: Sequence[Tuple[PathT, int, int]],
+                   now: float) -> List[ReadOutcome]:
+        """Serve a batch of (file_path, offset, size) requests at one
+        timestamp, running the tick/allocation cadence once for the batch."""
+        outs = [self._read_impl(fp, off, sz, now)
+                for fp, off, sz in requests]
+        self.tick(now)
+        return outs
+
+    def read_serial(self, file_path: PathT, offset: int, size: int,
+                    now: float) -> ReadOutcome:
+        """Reference per-block read path (uncached walks; cross-checked
+        against the batched read() by tests/test_equivalence.py)."""
         out = ReadOutcome()
         fsize = self.meta.file_size(file_path)
         size = max(0, min(size, fsize - offset))
@@ -122,6 +302,7 @@ class IGTCache:
             self._read_block(file_path, b, bsize, now, out)
         if self.options.prefetch == "sfp":
             self._sfp_observe(file_path, out, now)
+        self.tick(now)
         return out
 
     def _read_block(self, file_path: PathT, b: int, bsize: int, now: float,
@@ -130,47 +311,66 @@ class IGTCache:
         key = block_key(leaf_path)
         levels = self._resolve_levels(file_path, b)
         self.tree.observe(levels, now, bsize)
-
         cmu, sub, governing = self._route(file_path, leaf_path, now, b)
+        self._serve_block(file_path, key, bsize, cmu, sub, governing, now,
+                          out)
+        out.prefetches.extend(self._gen_prefetch(file_path, leaf_path, cmu,
+                                                 governing, now))
+
+    def _serve_block(self, file_path: PathT, key: str, bsize: int,
+                     cmu: CacheManageUnit, sub: SubStream,
+                     governing: Optional[AccessStream], now: float,
+                     out: ReadOutcome) -> None:
+        """Hit/miss accounting + admission for one block (both read paths)."""
         cmu.note_access(now, bsize)
         if governing is not None and governing.ttl is not None:
             cmu.ttl = governing.ttl
         if self.options.fixed_ttl is not None:
             cmu.ttl = self.options.fixed_ttl
 
-        hit = self.cache.resident(key)
-        if hit:
-            self.stats.hits += 1
+        stats = self.stats
+        if key in self._blocks:
+            stats.hits += 1
             cmu.hits += 1
-            self.stats.bytes_from_cache += bsize
+            stats.bytes_from_cache += bsize
             pf_hit = key in self._prefetched_resident
             if pf_hit:
                 self._prefetched_resident.discard(key)
-                self.stats.prefetch_hits += 1
+                stats.prefetch_hits += 1
             cmu.on_hit(key)
             cmu.after_read(key)  # eager eviction for sequential streams
             out.blocks.append(BlockResult(key, bsize, True, pf_hit))
         else:
-            self.stats.misses += 1
+            stats.misses += 1
             cmu.misses += 1
-            self.stats.bytes_from_remote += bsize
+            stats.bytes_from_remote += bsize
             cmu.on_miss(key, sub)
             # Eager (sequential) streams read demand misses *through* the
             # cache: the block is consumed on arrival, so admitting it would
             # only evict a useful readahead block (§3.3 eager eviction).
-            banned = self._prefix_in(file_path, self._never_cache)
+            banned = self._never_cache.covers(file_path)
             if not banned and not isinstance(sub.policy, EagerEviction):
-                self.cache.insert(leaf_path, bsize, cmu, sub)
+                self.cache.insert_key(key, bsize, cmu, sub)
             out.blocks.append(BlockResult(key, bsize, False))
 
-        out.prefetches.extend(self._gen_prefetch(file_path, leaf_path, cmu,
-                                                 governing, now))
-        self.tick(now)
-
     # ------------------------------------------------------- path resolution
+    def _file_ctx(self, file_path: PathT) -> _FileCtx:
+        cache = self._ctx_cache
+        ctx = cache.get(file_path)
+        if ctx is None:
+            fsize = self.meta.file_size(file_path)
+            nblocks = max(1, -(-fsize // self.cfg.block_size))
+            ctx = _FileCtx(file_path, self.levels.dir_levels(file_path),
+                           fsize, nblocks, "/".join(file_path))
+            cache[file_path] = ctx
+            if len(cache) > self._ctx_cap:
+                cache.popitem(last=False)
+        return ctx
+
     def _resolve_levels(self, file_path: PathT, b: int):
         """Root-to-leaf (key, index, parent-listing-size); the tree applies
-        layer compression internally (degenerate levels record nothing)."""
+        layer compression internally (degenerate levels record nothing).
+        Reference (uncached) form of the LevelCache resolution."""
         levels: List[Tuple[str, int, int]] = []
         for depth in range(len(file_path)):
             parent = file_path[:depth]
@@ -183,6 +383,7 @@ class IGTCache:
         levels.append((f"#{b}", b, nblocks))
         return levels
 
+    # --------------------------------------------------------------- routing
     def _route(self, file_path: PathT, leaf_path: PathT, now: float,
                block: int):
         """Map an access to (CMU, SubStream, governing pattern node).
@@ -197,16 +398,7 @@ class IGTCache:
         governing = self.tree.deepest_informative(leaf_path)
         if isolating:
             anchor = self.tree.shallowest_non_trivial(file_path)
-            if anchor is not None and anchor.path not in self.cache.cmus:
-                cmu = self.cache.create_cmu(
-                    anchor.path, self.meta.subtree_bytes(anchor.path), now)
-                if self.options.allocation == "static":
-                    want = int(self.options.static_fraction *
-                               max(1, cmu.dataset_bytes))
-                    self._set_static_quota(cmu, want)
-                elif self.options.allocation == "adaptive":
-                    # late arrivals get their minimum share immediately
-                    self.rebalancer.seed(cmu, list(self.cache.cmus.values()))
+            self._maybe_create_cmu(anchor, now)
         cmu = self.cache.cmu_for_path(leaf_path)
         flat = Pattern.UNKNOWN
         if cmu is not self.cache.default_cmu:
@@ -214,6 +406,65 @@ class IGTCache:
             # which mixes unrelated datasets)
             ordinal, total = self.meta.flat_block_index(file_path, block)
             flat = cmu.note_flat(ordinal, total, now)
+        return self._pick_substream(cmu, governing, flat)
+
+    def _chain_governing(self, chain: ObservedChain) -> Optional[AccessStream]:
+        """Deepest non-trivial classified chain node — the chain-scan form
+        of ``tree.deepest_informative`` (shared by read and prefetch
+        completion)."""
+        W = self.cfg.window
+        for n in reversed(chain.cnodes):
+            if n.accesses >= W and n.pattern.pattern is not Pattern.UNKNOWN:
+                return n
+        return None
+
+    def _resolve_ctx_cmu(self, ctx: _FileCtx) -> CacheManageUnit:
+        """Per-file CMU resolution, cached until the CMU registry changes."""
+        cache = self.cache
+        if ctx.cmu is None or ctx.cmu_gen != cache.cmu_gen:
+            ctx.cmu = cache.cmu_for_path(ctx.file_path)
+            ctx.cmu_gen = cache.cmu_gen
+        return ctx.cmu
+
+    def _route_chain(self, ctx: _FileCtx, chain: ObservedChain, block: int,
+                     now: float):
+        """Chain-replay form of :meth:`_route`: the governing/anchor walks
+        become scans over the (already resolved) chain nodes."""
+        governing = self._chain_governing(chain)
+        if self.options.allocation != "shared":
+            W = self.cfg.window
+            anchor = None
+            for n in chain.cnodes:
+                if n.accesses >= W:
+                    anchor = n
+                    break
+            self._maybe_create_cmu(anchor, now)
+        cmu = self._resolve_ctx_cmu(ctx)
+        cache = self.cache
+        flat = Pattern.UNKNOWN
+        if cmu is not cache.default_cmu:
+            if ctx.flat_total < 0:
+                ctx.flat_start, ctx.flat_total = \
+                    self.meta.flat_block_index(ctx.file_path, 0)
+            flat = cmu.note_flat(ctx.flat_start + block, ctx.flat_total, now)
+        return self._pick_substream(cmu, governing, flat)
+
+    def _maybe_create_cmu(self, anchor: Optional[AccessStream],
+                          now: float) -> None:
+        if anchor is None or anchor.path in self.cache.cmus:
+            return
+        cmu = self.cache.create_cmu(
+            anchor.path, self.meta.subtree_bytes(anchor.path), now)
+        if self.options.allocation == "static":
+            want = int(self.options.static_fraction *
+                       max(1, cmu.dataset_bytes))
+            self._set_static_quota(cmu, want)
+        elif self.options.allocation == "adaptive":
+            # late arrivals get their minimum share immediately
+            self.rebalancer.seed(cmu, list(self.cache.cmus.values()))
+
+    def _pick_substream(self, cmu: CacheManageUnit,
+                        governing: Optional[AccessStream], flat: Pattern):
         pattern = Pattern.UNKNOWN
         gpath = cmu.root_path
         if governing is not None:
@@ -259,14 +510,12 @@ class IGTCache:
         if mode == "none" or self.cache.capacity <= 0:
             return []
         if mode in ("stride", "enhanced_stride"):
-            return self._stride_prefetch(file_path, leaf_path,
+            return self._stride_prefetch(file_path, int(leaf_path[-1][1:]),
                                          enhanced=(mode == "enhanced_stride"))
         if mode == "sfp":
             return []  # handled at file switch in read()
         # -------- adaptive (IGTCache §3.3) --------
         cands: List[Tuple[PathT, int]] = []
-        # Readahead horizon: bounded by the stream's quota (admission will
-        # evict consumed/stale blocks as needed) and the global horizon cap.
         budget = min(cmu.quota, self.cfg.prefetch_budget_bytes)
         # sequential levels: hierarchical prefetch at every sequential node
         node = self.tree.root
@@ -274,40 +523,82 @@ class IGTCache:
             child = node.children.get(comp)
             if child is None:
                 break
-            if (child.non_trivial(self.cfg)
-                    and child.pattern.pattern is Pattern.SEQUENTIAL
-                    and child.records):
-                idx = child.records[-1].index
-                if self._node_last_prefetch_idx.get(child.path) != idx:
-                    self._node_last_prefetch_idx[child.path] = idx
-                    # Adaptive depth: double while the stream keeps advancing
-                    # (fast consumers outrun a fixed N=4 window).
-                    depth = self._ra_depth.get(child.path,
-                                               self.cfg.prefetch_depth)
-                    if self.meta.is_file(child.path):
-                        got = block_sequential_candidates(
-                            self.meta, child, self.cfg, budget, depth=depth)
-                    else:
-                        got = sequential_candidates(
-                            self.meta, child, self.cfg, budget, depth=depth)
-                    if got:
-                        self._ra_depth[child.path] = min(
-                            depth * 2, self.cfg.max_readahead_items)
-                    cands.extend(got)
+            self._seq_node_candidates(child, budget, cands)
             node = child
+        self._stat_candidates(cmu, cands)
+        return self._dedup_prefetch(cands)
+
+    def _gen_prefetch_chain(self, ctx: _FileCtx, chain: ObservedChain,
+                            block: int, cmu: CacheManageUnit,
+                            governing: Optional[AccessStream],
+                            now: float) -> List[Tuple[PathT, int]]:
+        mode = self.options.prefetch
+        if mode == "none" or self.cache.capacity <= 0:
+            return []
+        if mode in ("stride", "enhanced_stride"):
+            return self._stride_prefetch(ctx.file_path, block,
+                                         enhanced=(mode == "enhanced_stride"))
+        if mode == "sfp":
+            return []
+        cands: List[Tuple[PathT, int]] = []
+        budget = None
+        window = self.cfg.window
+        seq = Pattern.SEQUENTIAL
+        for child in chain.cnodes:
+            # inline gate (hot path): only sequential non-trivial nodes with
+            # a recorded window generate candidates
+            if (child.accesses >= window and child.count
+                    and child.pattern.pattern is seq):
+                if budget is None:
+                    budget = min(cmu.quota, self.cfg.prefetch_budget_bytes)
+                self._seq_node_candidates(child, budget, cands)
+        self._stat_candidates(cmu, cands)
+        if not cands:
+            return cands
+        return self._dedup_prefetch(cands)
+
+    def _seq_node_candidates(self, child: AccessStream, budget: int,
+                             cands: List[Tuple[PathT, int]]) -> None:
+        """Sequential readahead at one tree level (shared by both paths).
+
+        Readahead horizon: bounded by the stream's quota (admission will
+        evict consumed/stale blocks as needed) and the global horizon cap.
+        """
+        if not (child.non_trivial(self.cfg)
+                and child.pattern.pattern is Pattern.SEQUENTIAL
+                and child.count):
+            return
+        idx = child.last_index
+        if self._node_last_prefetch_idx.get(child.path) == idx:
+            return
+        self._node_last_prefetch_idx[child.path] = idx
+        # Adaptive depth: double while the stream keeps advancing
+        # (fast consumers outrun a fixed N=4 window).
+        depth = self._ra_depth.get(child.path, self.cfg.prefetch_depth)
+        if self.meta.is_file(child.path):
+            got = block_sequential_candidates(
+                self.meta, child, self.cfg, budget, depth=depth)
+        else:
+            got = sequential_candidates(
+                self.meta, child, self.cfg, budget, depth=depth)
+        if got:
+            self._ra_depth[child.path] = min(
+                depth * 2, self.cfg.max_readahead_items)
+        cands.extend(got)
+
+    def _stat_candidates(self, cmu: CacheManageUnit,
+                         cands: List[Tuple[PathT, int]]) -> None:
         # random: statistical whole-dataset prefetch, once per (re)classify
-        if (cmu.effective_pattern() is Pattern.RANDOM
-                and not cmu.stat_prefetch_done):
+        if (not cmu.stat_prefetch_done
+                and cmu.effective_pattern() is Pattern.RANDOM):
             cmu.stat_prefetch_done = True
             cands.extend(statistical_candidates(
                 self.meta, cmu.root_path, cmu.quota, cmu.dataset_bytes,
                 self.cfg, lambda p: self.cache.resident(block_key(p))))
-        return self._dedup_prefetch(cands)
 
-    def _stride_prefetch(self, file_path: PathT, leaf_path: PathT,
+    def _stride_prefetch(self, file_path: PathT, b: int,
                          enhanced: bool) -> List[Tuple[PathT, int]]:
         """JuiceFS-style block readahead within one file."""
-        b = int(leaf_path[-1][1:])
         last, run, depth = self._stride_state.get(file_path, (-2, 0, 4))
         if b == last + 1:
             run += 1
@@ -369,15 +660,20 @@ class IGTCache:
         if self.cache.resident(key):
             return True
         file_path = path[:-1] if path[-1].startswith("#") else path
-        cmu = self.cache.cmu_for_path(path)
-        governing = self.tree.deepest_informative(path)
+        ctx = self._file_ctx(file_path)
+        cmu = self._resolve_ctx_cmu(ctx)
+        chain = ctx.chain
+        if chain is not None and chain.valid():
+            governing = self._chain_governing(chain)
+        else:
+            governing = self.tree.deepest_informative(path)
         pattern = governing.pattern.pattern if governing else Pattern.UNKNOWN
         gpath = governing.path if governing else cmu.root_path
         if self.options.eviction != "adaptive":
             sub = self._fixed_substream(cmu)
         else:
             sub = cmu.substream(gpath, pattern)
-        ok = self.cache.insert(path, size, cmu, sub)
+        ok = self.cache.insert_key(key, size, cmu, sub)
         if ok:
             self._prefetched_resident.add(key)
         else:
@@ -389,6 +685,11 @@ class IGTCache:
 
     # ------------------------------------------------------------------ tick
     def tick(self, now: float) -> None:
+        """Scheduled maintenance: TTL sweep + allocation round.
+
+        Runs once per read()/read_batch() and on the caller's own cadence
+        (the simulator's 5 s event) — never per block (§4).
+        """
         # TTL sweep (rate-limited).  Eviction exists to free space for other
         # active workloads (§3.3) — so it only fires under cache pressure.
         if now - self._last_ttl_sweep >= 5.0:
@@ -397,7 +698,7 @@ class IGTCache:
             for path, cmu in list(self.cache.cmus.items()):
                 if cmu is self.cache.default_cmu:
                     continue
-                if self._prefix_in(path, self._pinned):
+                if self._pinned.covers(path):
                     continue  # user-pinned: exempt from TTL expiry
                 ttl = (self.options.fixed_ttl if self.options.fixed_ttl
                        is not None else cmu.effective_ttl())
@@ -406,18 +707,25 @@ class IGTCache:
                 idle_since = max(cmu.last_access_time, cmu.created_at)
                 if pressure and now - idle_since > ttl and cmu.used > 0:
                     self.cache.remove_cmu(path)
-        # allocation round
+        # allocation round (list materialization only when a round fires)
         alloc = self.options.allocation
-        cmus = [c for c in self.cache.cmus.values()]
-        workload_cmus = [c for c in cmus if c is not self.cache.default_cmu]
-        if alloc == "adaptive" and self.rebalancer.due(now):
-            self.rebalancer.rebalance(cmus, now)
-        elif alloc == "quiver" and self.quiver.due(now):
-            self.quiver.rebalance(workload_cmus, now, self._workload_capacity())
-            self._give_rest_to_default()
-        elif alloc == "fluid" and self.fluid.due(now):
-            self.fluid.rebalance(workload_cmus, now, self._workload_capacity())
-            self._give_rest_to_default()
+        if alloc == "adaptive":
+            if self.rebalancer.due(now):
+                self.rebalancer.rebalance(list(self.cache.cmus.values()), now)
+        elif alloc == "quiver":
+            if self.quiver.due(now):
+                self.quiver.rebalance(self._workload_cmus(), now,
+                                      self._workload_capacity())
+                self._give_rest_to_default()
+        elif alloc == "fluid":
+            if self.fluid.due(now):
+                self.fluid.rebalance(self._workload_cmus(), now,
+                                     self._workload_capacity())
+                self._give_rest_to_default()
+
+    def _workload_cmus(self) -> List[CacheManageUnit]:
+        return [c for c in self.cache.cmus.values()
+                if c is not self.cache.default_cmu]
 
     def _workload_capacity(self) -> int:
         return self.cache.capacity - self.cfg.min_share  # default keeps a floor

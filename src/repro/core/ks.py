@@ -15,7 +15,9 @@ triangular gap law of a uniform-without-replacement (permutation) stream over
 from __future__ import annotations
 
 import math
-from typing import Callable, Sequence
+from typing import Callable, Sequence, Tuple
+
+import numpy as np
 
 
 def triangular_cdf(k: float, c: int) -> float:
@@ -93,6 +95,71 @@ def ks_test_random(gaps: Sequence[float], c: int, alpha: float) -> tuple[bool, f
     d = ecdf_ks_statistic(gaps, lambda k: triangular_cdf(k, c))
     d_alpha = ks_critical(n, alpha)
     return d < d_alpha, d, d_alpha
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (matrix) forms — one K-S test per row, all rows in one shot.
+# The scalar functions above are the cross-checked reference (see
+# tests/test_equivalence.py); these must agree with them row by row.
+# ---------------------------------------------------------------------------
+
+def triangular_cdf_matrix(k: np.ndarray, c: np.ndarray) -> np.ndarray:
+    """Elementwise triangular CDF; ``c`` broadcasts per row (shape (R, 1)).
+
+    Mirrors :func:`triangular_cdf`: F = 2k/(c-1) - k(k+1)/(c(c-1)) with k
+    clamped to [?, c-1], floored, and F=0 below the support / F=1 for c<2.
+    """
+    c = c.astype(np.float64)
+    kf = np.floor(np.minimum(k.astype(np.float64), c - 1.0))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        f = 2.0 * kf / (c - 1.0) - kf * (kf + 1.0) / (c * (c - 1.0))
+    f = np.where(kf < 1.0, 0.0, f)
+    return np.where(c < 2.0, 1.0, f)
+
+
+def ks_critical_vec(n: np.ndarray, alpha: float) -> np.ndarray:
+    """Row-wise Smirnov critical values (same closed form as ks_critical)."""
+    n = n.astype(np.float64)
+    c_alpha = math.sqrt(-0.5 * math.log(alpha / 2.0))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sqrt_n = np.sqrt(n)
+        d = c_alpha / (sqrt_n + 0.12 + 0.11 / sqrt_n)
+    return np.where(n <= 0, 1.0, d)
+
+
+def ks_test_random_matrix(abs_gaps: np.ndarray, lengths: np.ndarray,
+                          c: np.ndarray, alpha: float
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Matrix form of :func:`ks_test_random`.
+
+    ``abs_gaps`` is an (R, G) matrix of |gap| samples, row r padded beyond
+    ``lengths[r]`` with a value larger than any real sample (so the padded
+    tail sorts to the end and is masked out).  ``c`` is the per-row index-
+    space size.  Returns (accept_H0, D, D_alpha) arrays of shape (R,).
+
+    Row results are independent of the other rows and of the padded width:
+    every per-row quantity is either an exact integer count, an elementwise
+    float op, or a masked max — no cross-column float accumulation — so a
+    window classifies identically whether it rides alone or in a batch.
+    """
+    R, G = abs_gaps.shape
+    srt = np.sort(abs_gaps, axis=1)
+    pos = np.arange(1, G + 1, dtype=np.float64)[None, :]
+    mask = pos <= lengths[:, None]
+    n = lengths.astype(np.float64)[:, None]
+    f = triangular_cdf_matrix(srt, c[:, None])
+    with np.errstate(divide="ignore", invalid="ignore"):
+        d_plus = pos / n - f
+        d_minus = f - (pos - 1.0) / n
+    dev = np.maximum(d_plus, d_minus)
+    dev = np.where(mask, dev, -np.inf)
+    d = np.max(dev, axis=1)
+    d = np.where(lengths > 0, d, 0.0)
+    d_alpha = ks_critical_vec(lengths, alpha)
+    accept = (d < d_alpha) & (lengths > 0) & (c >= 3)
+    d = np.where((lengths == 0) | (c < 3), 1.0, d)
+    d_alpha = np.where((lengths == 0) | (c < 3), 0.0, d_alpha)
+    return accept, d, d_alpha
 
 
 def normal_quantile(p: float) -> float:

@@ -46,3 +46,43 @@ class StoreMeta(Protocol):
         dataset, in traversal order — the flattened index space used for
         dataset-granularity pattern analysis."""
         ...
+
+
+class LevelCache:
+    """Memoized root→leaf level resolution over a StoreMeta (§4).
+
+    The seed engine re-asked the store for ``listing_size``/``child_index``
+    at every directory level of every block access.  Listings are static for
+    the lifetime of a run (datasets are immutable once registered), so the
+    (name, index, listing-size) decomposition of a path is a pure function of
+    the path — memoize it per directory, sharing the common prefix across
+    all files in that directory.  Call :meth:`invalidate` if the backing
+    store ever re-registers datasets mid-run.
+    """
+
+    # Bound on memoized paths: entries are tiny (one tuple-of-tuples per
+    # path) but a process streaming over millions of distinct files must not
+    # grow without limit; on overflow the cache simply resets (a rebuild
+    # costs a handful of dict lookups per path).
+    MAX_ENTRIES = 1 << 20
+
+    def __init__(self, meta: StoreMeta, max_entries: int = MAX_ENTRIES) -> None:
+        self._meta = meta
+        self._max = max_entries
+        self._dirs: dict = {(): ()}
+
+    def dir_levels(self, path: PathT) -> Tuple[Tuple[str, int, int], ...]:
+        """(name, child-index, parent-listing-size) for each component."""
+        got = self._dirs.get(path)
+        if got is None:
+            parent, name = path[:-1], path[-1]
+            got = self.dir_levels(parent) + (
+                (name, self._meta.child_index(parent, name),
+                 self._meta.listing_size(parent)),)
+            if len(self._dirs) >= self._max:
+                self._dirs = {(): ()}
+            self._dirs[path] = got
+        return got
+
+    def invalidate(self) -> None:
+        self._dirs = {(): ()}

@@ -12,9 +12,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
-from .ks import ks_test_random, normal_quantile
+import numpy as np
+
+from .ks import (ks_critical, ks_test_random, ks_test_random_matrix,
+                 normal_quantile)
 from .types import AccessRecord, CacheConfig, Pattern
 
 
@@ -111,6 +114,200 @@ def classify(records: Sequence[AccessRecord], total: int, cfg: CacheConfig) -> P
     accept, d, d_alpha = ks_test_random(abs_gaps, c, cfg.alpha)
     pattern = Pattern.RANDOM if accept else Pattern.SKEWED
     return PatternResult(pattern, d_stat=d, d_critical=d_alpha, seq_fraction=frac)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized classification (§4 overhead optimization): all windows due for
+# (re)analysis are classified in one matrix pass.  The scalar classify()
+# above stays as the cross-checked reference; per-row results are designed to
+# be independent of batching (integer counts, elementwise ops, masked maxes —
+# no cross-column float accumulation), so classify_batch([w]) == the result
+# of w inside any larger batch.
+# ---------------------------------------------------------------------------
+
+# One analysis window: (chronological item indices, listing size c).
+Window = Tuple[np.ndarray, int]
+
+
+def _mode_stride(gaps: np.ndarray) -> int:
+    """First-occurrence-wins mode of the in-range positive gaps (matches the
+    dict-insertion-order tie-break of detect_sequential)."""
+    pos = gaps[(gaps > 0) & (gaps <= MAX_STRIDE)]
+    if pos.size == 0:
+        return 1
+    vals, counts = np.unique(pos, return_counts=True)
+    best = counts.max()
+    cands = vals[counts == best]
+    if cands.size == 1:
+        return int(cands[0])
+    first_occ = [int(np.argmax(pos == v)) for v in cands]
+    return int(cands[int(np.argmin(first_occ))])
+
+
+def _classify_one(a: np.ndarray, total: int,
+                  cfg: CacheConfig) -> PatternResult:
+    """Single-window fast path of :func:`classify_batch`.
+
+    Same decision procedure and the same float expressions (in the same
+    evaluation order) as the matrix path below, on 1-D arrays — a window
+    classifies identically whether it rides alone or in a batch.
+    """
+    n = int(a.size)
+    if n < 2:
+        return PatternResult(Pattern.UNKNOWN)
+    gaps = np.diff(a)
+    m = n - 1
+    in_cnt = int(np.count_nonzero((gaps >= 0) & (gaps <= MAX_STRIDE)))
+    back_cnt = int(np.count_nonzero(gaps < 0))
+    drift = int(gaps.sum())
+    frac = in_cnt / m
+    thr = cfg.sequential_threshold
+    if frac >= thr and back_cnt / m <= 1.0 - thr and drift > 0:
+        return PatternResult(Pattern.SEQUENTIAL, stride=_mode_stride(gaps),
+                             seq_fraction=float(frac))
+    srt_idx = np.sort(a)
+    c = max(int(total), int(srt_idx[-1]) + 1)
+    distinct = 1 + int(np.count_nonzero(srt_idx[1:] != srt_idx[:-1]))
+    if c <= 2 or distinct <= 1:
+        return PatternResult(Pattern.UNKNOWN)
+    if n >= 4 and c >= 4:
+        cf = float(c)
+        wf = float(n)
+        p1 = (1.0 - 1.0 / cf) ** wf
+        p2 = (1.0 - 2.0 / cf) ** wf
+        e_d = cf * (1.0 - p1)
+        var = cf * p1 + cf * (cf - 1.0) * p2 - cf * cf * p1 * p1
+        sd = math.sqrt(max(var, 1e-9))
+        z = (e_d - distinct) / max(sd, 1.0)
+        if z > cfg.distinct_z_threshold:
+            return PatternResult(Pattern.SKEWED)
+    cf = float(c)
+    # kf = floor(min(|gap|, c-1)) — exact on int64 without the float round
+    # trip (values < 2^53); identical to the matrix path's floor/minimum
+    kf = np.minimum(np.sort(np.abs(gaps)), c - 1)
+    f = 2.0 * kf / (cf - 1.0) - kf * (kf + 1.0) / (cf * (cf - 1.0))
+    f[kf < 1] = 0.0
+    pos, pos_prev = _ecdf_positions(m)
+    dev = np.maximum(pos - f, f - pos_prev)
+    d = float(dev.max())
+    d_alpha = ks_critical(m, cfg.alpha)
+    pat = Pattern.RANDOM if d < d_alpha else Pattern.SKEWED
+    return PatternResult(pat, d_stat=d, d_critical=d_alpha,
+                         seq_fraction=float(frac))
+
+
+_ECDF_CACHE: dict = {}
+
+
+def _ecdf_positions(m: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(i/m, (i-1)/m) for i=1..m — cached; windows recur at the same size."""
+    got = _ECDF_CACHE.get(m)
+    if got is None:
+        pos = np.arange(1, m + 1, dtype=np.float64)
+        got = (pos / m, (pos - 1.0) / m)
+        if len(_ECDF_CACHE) < 1024:
+            _ECDF_CACHE[m] = got
+    return got
+
+
+def classify_batch(windows: Sequence[Window],
+                   cfg: CacheConfig) -> List[PatternResult]:
+    """Classify many observation windows in one vectorized pass.
+
+    Each window is (indices, total): the chronological item indices of one
+    AccessStream's observation window plus its listing size.  Implements the
+    same decision procedure as :func:`classify` — sequential screen →
+    distinct-deficit z-test → K-S against the triangular law — with every
+    stage computed over the padded (R, W) matrix at once.
+    """
+    R = len(windows)
+    if R == 0:
+        return []
+    if R == 1:
+        a, total = windows[0]
+        return [_classify_one(np.asarray(a, dtype=np.int64), int(total), cfg)]
+    lens = np.fromiter((len(w[0]) for w in windows), np.int64, R)
+    totals = np.fromiter((w[1] for w in windows), np.int64, R)
+    W = max(int(lens.max()), 2)
+    idx = np.zeros((R, W), np.int64)
+    for r, (a, _) in enumerate(windows):
+        idx[r, : len(a)] = a
+
+    cols = np.arange(W, dtype=np.int64)[None, :]
+    imask = cols < lens[:, None]
+    m = np.maximum(lens - 1, 0)                    # gap count per row
+    gaps = idx[:, 1:] - idx[:, :-1]
+    gmask = cols[:, : W - 1] < m[:, None]
+
+    # -- sequential screen (exact integer counts) ---------------------------
+    in_cnt = ((gaps >= 0) & (gaps <= MAX_STRIDE) & gmask).sum(axis=1)
+    back_cnt = ((gaps < 0) & gmask).sum(axis=1)
+    drift = np.where(gmask, gaps, 0).sum(axis=1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac = np.where(m > 0, in_cnt / np.maximum(m, 1), 0.0)
+        backfrac = np.where(m > 0, back_cnt / np.maximum(m, 1), 0.0)
+    thr = cfg.sequential_threshold
+    is_seq = (m > 0) & (frac >= thr) & (backfrac <= 1.0 - thr) & (drift > 0)
+
+    # -- index-space geometry ----------------------------------------------
+    row_max = np.where(imask, idx, np.iinfo(np.int64).min).max(axis=1)
+    c = np.maximum(totals, row_max + 1)
+    srt = np.sort(np.where(imask, idx, np.iinfo(np.int64).max), axis=1)
+    changed = (srt[:, 1:] != srt[:, :-1]) & gmask
+    distinct = np.where(lens > 0, changed.sum(axis=1) + 1, 0)
+
+    # -- distinct-count z (frequency skew), same formula as distinct_deficit
+    w_f = lens.astype(np.float64)
+    c_f = c.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        p1 = (1.0 - 1.0 / c_f) ** w_f
+        p2 = (1.0 - 2.0 / c_f) ** w_f
+        e_d = c_f * (1.0 - p1)
+        var = c_f * p1 + c_f * (c_f - 1.0) * p2 - c_f * c_f * p1 * p1
+        sd = np.sqrt(np.maximum(var, 1e-9))
+        z = (e_d - distinct) / np.maximum(sd, 1.0)
+    z = np.where((lens >= 4) & (c >= 4), z, 0.0)
+
+    # -- K-S against the triangular permutation law ------------------------
+    abs_gaps = np.where(gmask, np.abs(gaps), np.iinfo(np.int64).max
+                        ).astype(np.float64)
+    accept, d, d_alpha = ks_test_random_matrix(abs_gaps, m, c, cfg.alpha)
+
+    out: List[PatternResult] = []
+    for r in range(R):
+        if lens[r] < 2:
+            out.append(PatternResult(Pattern.UNKNOWN))
+        elif is_seq[r]:
+            stride = _mode_stride(gaps[r, : m[r]])
+            out.append(PatternResult(Pattern.SEQUENTIAL, stride=stride,
+                                     seq_fraction=float(frac[r])))
+        elif c[r] <= 2 or distinct[r] <= 1:
+            out.append(PatternResult(Pattern.UNKNOWN))
+        elif z[r] > cfg.distinct_z_threshold:
+            out.append(PatternResult(Pattern.SKEWED))
+        else:
+            pat = Pattern.RANDOM if accept[r] else Pattern.SKEWED
+            out.append(PatternResult(pat, d_stat=float(d[r]),
+                                     d_critical=float(d_alpha[r]),
+                                     seq_fraction=float(frac[r])))
+    return out
+
+
+def fit_adaptive_ttl_arr(times: np.ndarray,
+                         cfg: CacheConfig) -> Optional[float]:
+    """Array form of :func:`fit_adaptive_ttl` over a chronological window."""
+    if times.size < 3:
+        return None
+    diffs = times[1:] - times[:-1]
+    gaps = diffs[diffs >= 0.0]
+    n = gaps.size
+    if n < 2:
+        return None
+    mu = float(gaps.sum()) / n
+    var = float(((gaps - mu) ** 2).sum()) / max(1, n - 1)
+    sigma = math.sqrt(var)
+    z = normal_quantile(1.0 - cfg.ttl_significance)
+    return mu + z * sigma + cfg.ttl_base
 
 
 # ---------------------------------------------------------------------------

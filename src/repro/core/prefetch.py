@@ -106,10 +106,10 @@ def sequential_candidates(meta: StoreMeta, node: AccessStream,
     overrides the base N (the engine grows it while the stream keeps
     consuming readahead — footnote-7 policy extension).
     """
-    if not node.records:
+    if node.count == 0:
         return []
     depth = depth or cfg.prefetch_depth
-    last = node.records[-1]
+    last_index = node.last_index
     stride = max(1, node.pattern.stride)
     listing = meta.listing(node.path)
     if not listing:
@@ -117,7 +117,7 @@ def sequential_candidates(meta: StoreMeta, node: AccessStream,
     hot = _sibling_child_profile(node, cfg.f_p)
     out: List[Candidate] = []
     for step in range(1, depth + 1):
-        idx = last.index + step * stride
+        idx = last_index + step * stride
         if idx >= len(listing):
             break
         name = listing[idx]
@@ -135,16 +135,16 @@ def block_sequential_candidates(meta: StoreMeta, file_node: AccessStream,
                                 cfg: CacheConfig, budget: int,
                                 depth: int = 0) -> List[Candidate]:
     """Next-N blocks inside one file (the classic readahead case)."""
-    if not file_node.records:
+    if file_node.count == 0:
         return []
     depth = depth or cfg.prefetch_depth
-    last = file_node.records[-1]
+    last_index = file_node.last_index
     stride = max(1, file_node.pattern.stride)
     size = meta.file_size(file_node.path)
     nblocks = max(1, -(-size // cfg.block_size))
     out: List[Candidate] = []
     for step in range(1, depth + 1):
-        b = last.index + step * stride
+        b = last_index + step * stride
         if b >= nblocks:
             break
         bsize = min(cfg.block_size, size - b * cfg.block_size)

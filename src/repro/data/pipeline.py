@@ -107,9 +107,7 @@ class CachedTokenPipeline:
         if self.worker:
             self.worker.start()
 
-    def _read_sample(self, fpath: PathT, offset: int) -> np.ndarray:
-        now = time.monotonic()
-        out = self.engine.read(fpath, offset, self.sample_bytes, now)
+    def _account_outcome(self, out, now: float) -> None:
         self.stats.cache_hits += sum(1 for b in out.blocks if b.hit)
         self.stats.cache_misses += sum(1 for b in out.blocks if not b.hit)
         self.stats.bytes_read += self.sample_bytes
@@ -118,6 +116,8 @@ class CachedTokenPipeline:
         else:
             for path, size in out.prefetches:
                 self.engine.complete_prefetch(path, size, now)
+
+    def _synth_tokens(self, fpath: PathT, offset: int) -> np.ndarray:
         # deterministic synthetic tokens for the sample's byte range
         block = offset // (4 * MB)
         raw = self.store.fetch_block(fpath + (f"#{block}",),
@@ -127,14 +127,27 @@ class CachedTokenPipeline:
                   + tokens[2::4] * 257 + tokens[3::4]) % self.vocab
         return tokens[: self.seq_len + 1].astype(np.int32)
 
+    def _read_sample(self, fpath: PathT, offset: int) -> np.ndarray:
+        now = time.monotonic()
+        out = self.engine.read(fpath, offset, self.sample_bytes, now)
+        self._account_outcome(out, now)
+        return self._synth_tokens(fpath, offset)
+
     def batches(self, epochs: int = 1) -> Iterator[Dict[str, np.ndarray]]:
         order = np.arange(len(self._samples))
         for _ in range(epochs):
             if self.access_pattern == "random":
                 self.rng.shuffle(order)
             for i in range(0, len(order) - self.batch + 1, self.batch):
-                toks = [self._read_sample(*self._samples[j])
-                        for j in order[i:i + self.batch]]
+                group = [self._samples[j] for j in order[i:i + self.batch]]
+                now = time.monotonic()
+                # batched read path: the whole training batch goes through
+                # the engine in one call (tick cadence amortized per batch)
+                outs = self.engine.read_batch(
+                    [(fp, off, self.sample_bytes) for fp, off in group], now)
+                for out in outs:
+                    self._account_outcome(out, now)
+                toks = [self._synth_tokens(fp, off) for fp, off in group]
                 arr = np.stack(toks)
                 self.stats.batches += 1
                 yield {"tokens": arr[:, :-1], "labels": arr[:, 1:]}

@@ -122,8 +122,10 @@ class ClusterSim:
         compute, reqs = job.steps[i]
         waits = 0
         local_cost = 0.0
-        for (fpath, off, size) in reqs:
-            out = self.engine.read(fpath, off, size, self.now)
+        # batched read path: one engine call per step batch — the tick/
+        # allocation cadence runs once per batch instead of once per request
+        outs = self.engine.read_batch(reqs, self.now)
+        for out in outs:
             for blk in out.blocks:
                 if blk.hit:
                     local_cost += self.local_latency + blk.size / self.local_bw

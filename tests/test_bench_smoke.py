@@ -1,0 +1,22 @@
+"""Fast --smoke run of the overhead benchmark: keeps the perf-tracking
+pipeline (BENCH_overhead.json emission) exercised in the test job."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def test_overhead_smoke_emits_json(tmp_path):
+    from benchmarks import overhead
+
+    out = tmp_path / "BENCH_overhead.json"
+    rows = overhead.main(smoke=True, json_path=out)
+    assert rows, "smoke run produced no CSV rows"
+    payload = json.loads(out.read_text())
+    assert payload["smoke"] is True
+    at10k = payload["results"]["10000"]
+    assert at10k["us_per_access"] > 0
+    assert at10k["nodes"] > 0
+    assert "seed_reference" in payload
+    assert "speedup_vs_pr1_start_seed" in payload

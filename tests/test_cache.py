@@ -1,5 +1,6 @@
 """UnifiedCache / CacheManageUnit space-isolation invariants."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import CacheManageUnit, UnifiedCache, block_key

@@ -1,5 +1,6 @@
 """Eviction policies: per-policy semantics + capacity-style invariants."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.eviction import (ARC, EagerEviction, FIFO, LFU, LRU, SIEVE,

@@ -4,6 +4,8 @@ import random
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
+pytest.importorskip("scipy")
 from hypothesis import given, settings, strategies as st
 from scipy import stats
 

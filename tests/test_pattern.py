@@ -3,6 +3,7 @@ import random
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pattern import classify, detect_sequential, distinct_deficit, fit_adaptive_ttl

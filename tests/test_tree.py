@@ -2,6 +2,7 @@
 import random
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.access_stream_tree import AccessStreamTree

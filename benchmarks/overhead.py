@@ -11,6 +11,11 @@ measures the engine, not the allocator's global heap scans.  Results are
 printed as CSV rows and persisted to ``BENCH_overhead.json`` so the perf
 trajectory is tracked across PRs.  ``--smoke`` runs a single down-scaled
 configuration in a couple of seconds for the test job.
+
+``--shards 1,4`` (the default) additionally measures the path-hash sharded
+facade (``ShardedIGTCache``) at the 10k cap over an 8-dataset layout, with
+the shard counts interleaved run-by-run so the pair is same-protocol
+comparable; the points land in the JSON's ``sharded`` section.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import time
 
 import numpy as np
 
-from repro.core import CacheConfig, IGTCache
+from repro.core import CacheConfig, IGTCache, ShardedIGTCache
 from repro.core.types import MB
 from repro.storage import RemoteStore, make_dataset
 
@@ -51,17 +56,12 @@ def tree_memory_bytes(tree) -> int:
     return total
 
 
-def _run_once(node_cap: int, n_accesses: int, seed: int):
-    # Deep layout (multi-block files → file nodes materialize) so the tree
-    # genuinely grows toward the cap: ~1 + 80 dirs + 80×120 file nodes
-    # reachable under the paper's window-100 child pruning.
-    store = RemoteStore()
-    store.add(make_dataset("ds", "dir_tree", n_dirs=80, files_per_dir=120,
-                           small_file_size=9 * MB))
-    cfg = CacheConfig(node_cap=node_cap, min_share=8 * MB,
-                      rebalance_quantum=8 * MB)
-    eng = IGTCache(store, 512 * MB, cfg=cfg)
-    files = store.datasets["ds"].files
+def _timed_trace(eng, files, n_accesses: int, seed: int) -> float:
+    """The shared measurement protocol: seeded random 64 KiB reads with
+    inline prefetch completion, timed with the cyclic GC paused.  One copy
+    for both the unsharded and the sharded axis — the interleaved
+    same-protocol comparison is only meaningful if both run exactly this.
+    Returns µs/access."""
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, len(files), n_accesses)
     offs = rng.integers(0, 2, n_accesses)
@@ -80,7 +80,20 @@ def _run_once(node_cap: int, n_accesses: int, seed: int):
     finally:
         if gc_was_enabled:
             gc.enable()
-    us = dt / n_accesses * 1e6
+    return dt / n_accesses * 1e6
+
+
+def _run_once(node_cap: int, n_accesses: int, seed: int):
+    # Deep layout (multi-block files → file nodes materialize) so the tree
+    # genuinely grows toward the cap: ~1 + 80 dirs + 80×120 file nodes
+    # reachable under the paper's window-100 child pruning.
+    store = RemoteStore()
+    store.add(make_dataset("ds", "dir_tree", n_dirs=80, files_per_dir=120,
+                           small_file_size=9 * MB))
+    cfg = CacheConfig(node_cap=node_cap, min_share=8 * MB,
+                      rebalance_quantum=8 * MB)
+    eng = IGTCache(store, 512 * MB, cfg=cfg)
+    us = _timed_trace(eng, store.datasets["ds"].files, n_accesses, seed)
     mem = tree_memory_bytes(eng.tree)
     return us, mem, eng.tree.node_count()
 
@@ -97,8 +110,45 @@ def measure(node_cap: int, n_accesses: int = 30_000, seed: int = 0,
     return best
 
 
+def _run_once_sharded(node_cap: int, n_accesses: int, seed: int,
+                      n_shards: int):
+    """One timed run of the path-hash sharded facade.
+
+    Multi-dataset layout (sharding routes on the top-level component, so a
+    single-dataset trace would land on one shard): 8 dir_tree datasets with
+    the same total dir/file population as the unsharded Fig.-17 layout.
+    Every shard count replays the identical seeded trace, so the
+    ``n_shards`` axis isolates routing + partitioning overhead.
+    """
+    store = RemoteStore()
+    for i in range(8):
+        store.add(make_dataset(f"ds{i}", "dir_tree", n_dirs=10,
+                               files_per_dir=120, small_file_size=9 * MB))
+    cfg = CacheConfig(node_cap=node_cap, min_share=8 * MB,
+                      rebalance_quantum=8 * MB)
+    eng = ShardedIGTCache(store, 512 * MB, cfg=cfg, n_shards=n_shards)
+    files = [f for ds in store.datasets.values() for f in ds.files]
+    us = _timed_trace(eng, files, n_accesses, seed)
+    mem = sum(tree_memory_bytes(s.tree) for s in eng.shards)
+    return us, mem, eng.node_count()
+
+
+def measure_shards(shard_counts, node_cap: int, n_accesses: int,
+                   seed: int, repeats: int):
+    """Interleaved same-protocol sweep over shard counts: repeats alternate
+    between configurations so the container's CPU drift (>2×/hour, see
+    docs/PERF.md) hits every configuration equally; best run per count."""
+    best = {n: None for n in shard_counts}
+    for _ in range(max(1, repeats)):
+        for n in shard_counts:
+            got = _run_once_sharded(node_cap, n_accesses, seed, n)
+            if best[n] is None or got[0] < best[n][0]:
+                best[n] = got
+    return best
+
+
 def main(scale: float = 1.0, seed: int = 0, smoke: bool = False,
-         json_path=None):
+         json_path=None, shard_counts=(1, 4)):
     caps = (10_000,) if smoke else (100, 1000, 10_000, 100_000)
     n_accesses = 6_000 if smoke else 30_000
     repeats = 2 if smoke else 3
@@ -116,11 +166,29 @@ def main(scale: float = 1.0, seed: int = 0, smoke: bool = False,
                             round(us, 1),
                             f"mem_mb={mem/2**20:.1f} nodes={nodes} "
                             f"paper@10k=47.6us/73.2MB"))
+    # ---- sharded-facade axis (interleaved, same protocol, 10k cap) ----
+    sharded = {}
+    if shard_counts:
+        shard_accesses = 4_000 if smoke else 30_000
+        got = measure_shards(tuple(shard_counts), 10_000, shard_accesses,
+                             seed, repeats)
+        for n in shard_counts:
+            us, mem, nodes = got[n]
+            sharded[str(n)] = {
+                "us_per_access": round(us, 1),
+                "tree_mb": round(mem / 2**20, 2),
+                "nodes": nodes,
+            }
+            rows.append(csv_row(f"sharded.shards_{n}.us_per_access",
+                                round(us, 1),
+                                f"mem_mb={mem/2**20:.1f} nodes={nodes} "
+                                f"interleaved-protocol"))
     payload = {
         "n_accesses": n_accesses,
         "repeats": repeats,
         "smoke": smoke,
         "results": results,
+        "sharded": sharded,
         "paper_reference": {"us_per_access_at_10k": 47.6,
                             "tree_mb_at_10k": 73.2},
         "seed_reference": dict(SEED_US_PER_ACCESS_10K),
@@ -143,5 +211,9 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="single down-scaled configuration for the test job")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", default="1,4",
+                    help="comma-separated shard counts for the sharded-"
+                         "facade axis ('' disables it)")
     args = ap.parse_args()
-    main(seed=args.seed, smoke=args.smoke)
+    counts = tuple(int(x) for x in args.shards.split(",") if x.strip())
+    main(seed=args.seed, smoke=args.smoke, shard_counts=counts)

@@ -6,21 +6,26 @@ adaptive prefetch/eviction/allocation (§3.3).
 """
 from .access_stream_tree import (AccessStream, AccessStreamTree,
                                  ObservedChain, analyze_streams)
-from .baselines import BUNDLES, bundle
+from .baselines import BUNDLES, bundle, bundle_engine
 from .cache import CacheManageUnit, UnifiedCache, block_key
 from .igtcache import EngineOptions, IGTCache, ReadOutcome, informative_depth
 from .ks import ks_critical, ks_test_random, triangular_cdf
 from .meta import LevelCache
 from .pattern import (PatternResult, classify, classify_batch,
-                      detect_sequential, fit_adaptive_ttl)
+                      detect_sequential, fit_adaptive_ttl,
+                      fit_adaptive_ttl_batch)
+from .sharded import (GlobalRebalancer, ShardedIGTCache, make_engine,
+                      shard_index)
 from .types import AccessRecord, CacheConfig, CacheStats, GB, MB, PathT, Pattern
 
 __all__ = [
     "AccessRecord", "AccessStream", "AccessStreamTree", "BUNDLES",
     "CacheConfig", "CacheManageUnit", "CacheStats", "EngineOptions", "GB",
-    "IGTCache", "LevelCache", "MB", "ObservedChain", "PathT", "Pattern",
-    "PatternResult", "ReadOutcome", "UnifiedCache", "analyze_streams",
-    "block_key", "bundle", "classify", "classify_batch", "detect_sequential",
-    "fit_adaptive_ttl", "informative_depth", "ks_critical", "ks_test_random",
-    "triangular_cdf",
+    "GlobalRebalancer", "IGTCache", "LevelCache", "MB", "ObservedChain",
+    "PathT", "Pattern", "PatternResult", "ReadOutcome", "ShardedIGTCache",
+    "UnifiedCache", "analyze_streams", "block_key", "bundle",
+    "bundle_engine", "classify",
+    "classify_batch", "detect_sequential", "fit_adaptive_ttl",
+    "fit_adaptive_ttl_batch", "informative_depth", "ks_critical",
+    "ks_test_random", "make_engine", "shard_index", "triangular_cdf",
 ]

@@ -33,7 +33,8 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from .pattern import (PatternResult, classify_batch, fit_adaptive_ttl_arr)
+from .pattern import (PatternResult, classify_batch, fit_adaptive_ttl_arr,
+                      fit_adaptive_ttl_batch)
 from .types import AccessRecord, CacheConfig, PathT, Pattern
 
 _INT64 = np.int64
@@ -190,11 +191,20 @@ class AccessStream:
                      or self.accesses - self.last_analyzed_at
                      >= cfg.reanalyze_every))
 
-    def apply_analysis(self, result: PatternResult, cfg: CacheConfig) -> None:
+    _TTL_UNSET = object()      # sentinel: fit here (solo path) vs batched
+
+    def apply_analysis(self, result: PatternResult, cfg: CacheConfig,
+                       ttl=_TTL_UNSET) -> None:
+        """Install a (re)classification result.  RANDOM streams get an
+        adaptive TTL — fitted here on the solo path, or passed in by
+        :func:`analyze_streams`, which fits every random node of the batch
+        in one ``fit_adaptive_ttl_batch`` matrix pass (§4)."""
         self.pattern = result
         self.last_analyzed_at = self.accesses
         if result.pattern is Pattern.RANDOM:
-            self.ttl = fit_adaptive_ttl_arr(self.window_times(), cfg)
+            if ttl is self._TTL_UNSET:
+                ttl = fit_adaptive_ttl_arr(self.window_times(), cfg)
+            self.ttl = ttl
 
     def analyze(self, cfg: CacheConfig) -> PatternResult:
         res = classify_batch([(self.window_indices(), self.total)], cfg)[0]
@@ -219,13 +229,23 @@ class AccessStream:
 
 
 def analyze_streams(nodes: List[AccessStream], cfg: CacheConfig) -> None:
-    """Vectorized (re)analysis of every due node in one matrix pass (§4)."""
+    """Vectorized (re)analysis of every due node in one matrix pass (§4):
+    one ``classify_batch`` call for the labels, then one
+    ``fit_adaptive_ttl_batch`` call fitting the adaptive TTL of every node
+    that classified RANDOM (previously a per-node fit)."""
     if not nodes:
         return
     results = classify_batch([(n.window_indices(), n.total) for n in nodes],
                              cfg)
+    rand_nodes = [n for n, res in zip(nodes, results)
+                  if res.pattern is Pattern.RANDOM]
+    ttls = iter(fit_adaptive_ttl_batch(
+        [n.window_times() for n in rand_nodes], cfg)) if rand_nodes else None
     for n, res in zip(nodes, results):
-        n.apply_analysis(res, cfg)
+        if res.pattern is Pattern.RANDOM:
+            n.apply_analysis(res, cfg, ttl=next(ttls))
+        else:
+            n.apply_analysis(res, cfg)
 
 
 class ObservedChain:

@@ -31,13 +31,24 @@ if TYPE_CHECKING:  # pragma: no cover
 
 
 class BufferWindow:
-    """Ghost cache of recently-evicted blocks (§3.3), LRU, max w entries."""
+    """Ghost cache of recently-evicted blocks (§3.3), LRU, max w entries.
+
+    ``hits``/``probes`` are per-round counters reset by the owning pool's
+    rebalance round; ``total_hits``/``total_probes`` accumulate for the
+    pool's lifetime so an *outside* observer (the cross-shard
+    GlobalRebalancer, whose round phase is independent of each shard's
+    read-triggered local rounds) can measure hit frequency over its own
+    interval via deltas instead of inheriting whatever reset phase the
+    local round left behind.
+    """
 
     def __init__(self, w: int) -> None:
         self.w = max(1, w)
         self._ghost: "OrderedDict[str, None]" = OrderedDict()
         self.hits = 0
         self.probes = 0
+        self.total_hits = 0
+        self.total_probes = 0
 
     def on_evict(self, key: str) -> None:
         self._ghost[key] = None
@@ -48,8 +59,10 @@ class BufferWindow:
     def probe(self, key: str) -> bool:
         """Called on every cache miss; True = the miss was ghost-avoidable."""
         self.probes += 1
+        self.total_probes += 1
         if key in self._ghost:
             self.hits += 1
+            self.total_hits += 1
             del self._ghost[key]
             return True
         return False
@@ -108,6 +121,33 @@ class Rebalancer:
     # a taker must beat the donor by this factor (ping-pong damping)
     HYSTERESIS = 1.25
 
+    def clears_hysteresis(self, donor_benefit: float,
+                          taker_benefit: float) -> bool:
+        """The taker must beat the donor by the damping factor."""
+        return taker_benefit > max(donor_benefit * self.HYSTERESIS,
+                                   donor_benefit + 1e-12)
+
+    def pick_move(self, est: Dict["CacheManageUnit", DemandEstimate],
+                  donors: List["CacheManageUnit"],
+                  takers: List["CacheManageUnit"]) -> Optional[tuple]:
+        """The paper's greedy rule for one quantum move: max-B taker with
+        unmet demand ← min-B shrinkable donor, damped by hysteresis.
+        Returns (donor, taker, bytes) or None when benefits have crossed.
+        Shared by the per-pool round below and the cross-shard
+        GlobalRebalancer (core.sharded)."""
+        if not donors or not takers:
+            return None
+        donor = min(donors, key=lambda c: est[c].benefit)
+        taker = max(takers, key=lambda c: est[c].benefit)
+        if donor is taker or not self.clears_hysteresis(est[donor].benefit,
+                                                        est[taker].benefit):
+            return None
+        amt = min(self.cfg.rebalance_quantum,
+                  donor.quota - self.cfg.min_share)
+        if amt <= 0:
+            return None
+        return donor, taker, amt
+
     def rebalance(self, cmus: List["CacheManageUnit"], now: float,
                   max_moves: Optional[int] = None) -> List[tuple]:
         """One round: shift quanta from min-B donors to max-B takers until
@@ -127,18 +167,10 @@ class Rebalancer:
         for _ in range(max_moves):
             donors = [c for c in cmus if est[c].can_shrink]
             takers = [c for c in cmus if est[c].wants_more]
-            if not donors or not takers:
+            got = self.pick_move(est, donors, takers)
+            if got is None:
                 break
-            donor = min(donors, key=lambda c: est[c].benefit)
-            taker = max(takers, key=lambda c: est[c].benefit)
-            if donor is taker or est[taker].benefit <= max(
-                    est[donor].benefit * self.HYSTERESIS,
-                    est[donor].benefit + 1e-12):
-                break
-            amt = min(self.cfg.rebalance_quantum,
-                      donor.quota - self.cfg.min_share)
-            if amt <= 0:
-                break
+            donor, taker, amt = got
             donor.set_quota(donor.quota - amt)
             taker.set_quota(taker.quota + amt)
             moves.append((donor, taker, amt))

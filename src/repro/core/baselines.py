@@ -7,7 +7,10 @@ against; Alluxio ships effectively the same policies, §5.1).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 from .igtcache import EngineOptions
+from .types import CacheConfig
 
 BUNDLES = {
     # the paper's system
@@ -57,3 +60,17 @@ BUNDLES = {
 
 def bundle(name: str) -> EngineOptions:
     return BUNDLES[name]
+
+
+def bundle_engine(name: str, meta, capacity: int,
+                  cfg: Optional[CacheConfig] = None, n_shards: int = 1):
+    """Construct an engine running the named bundle, sharded when asked.
+
+    Baselines ride the same sharded facade as IGTCache proper — the
+    comparison in the evaluation stays apples-to-apples at any shard count
+    (the global cross-shard rebalancer only activates for the adaptive
+    allocation, exactly as the shard-local one does).
+    """
+    from .sharded import make_engine
+    return make_engine(meta, capacity, cfg=cfg, options=bundle(name),
+                       n_shards=n_shards)

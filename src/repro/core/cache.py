@@ -450,6 +450,22 @@ class UnifiedCache:
         # default may now be over quota if capacity shrank elsewhere
         default.set_quota(default.quota)
 
+    # -- cross-shard capacity (core.sharded) -------------------------------------
+    def adjust_capacity(self, delta: int) -> None:
+        """Grow or shrink this pool's capacity by ``delta`` bytes.
+
+        Used by the cross-shard GlobalRebalancer: a quantum moving between
+        shards shrinks the donor shard's pool and grows the taker's.  The
+        caller is responsible for the paired CMU quota move (shrink the donor
+        CMU before taking its capacity, grow the taker CMU after granting
+        it), which keeps ``sum(quota) == capacity`` on both sides.
+        """
+        if self.capacity + delta < 0:
+            raise ValueError(
+                f"capacity adjustment {delta} would underflow pool "
+                f"capacity {self.capacity}")
+        self.capacity += delta
+
     # -- residency transitions -----------------------------------------------------
     def insert(self, path: PathT, size: int, cmu: CacheManageUnit,
                sub: SubStream) -> bool:

@@ -714,18 +714,28 @@ class IGTCache:
                 self.rebalancer.rebalance(list(self.cache.cmus.values()), now)
         elif alloc == "quiver":
             if self.quiver.due(now):
-                self.quiver.rebalance(self._workload_cmus(), now,
+                self.quiver.rebalance(self.workload_cmus(), now,
                                       self._workload_capacity())
                 self._give_rest_to_default()
         elif alloc == "fluid":
             if self.fluid.due(now):
-                self.fluid.rebalance(self._workload_cmus(), now,
+                self.fluid.rebalance(self.workload_cmus(), now,
                                      self._workload_capacity())
                 self._give_rest_to_default()
 
-    def _workload_cmus(self) -> List[CacheManageUnit]:
-        return [c for c in self.cache.cmus.values()
-                if c is not self.cache.default_cmu]
+    def workload_cmus(self) -> List[CacheManageUnit]:
+        """Non-default CacheManageUnits of this engine (shard-local view;
+        the ShardedIGTCache facade merges these across shards for
+        cluster-wide allocation)."""
+        return [c for _, c in self.iter_workload_cmus()]
+
+    def iter_workload_cmus(self):
+        """(root_path, CMU) pairs for every workload stream — the uniform
+        accessor shared with ShardedIGTCache (sim tracing, examples)."""
+        default = self.cache.default_cmu
+        for path, cmu in self.cache.cmus.items():
+            if cmu is not default:
+                yield path, cmu
 
     def _workload_capacity(self) -> int:
         return self.cache.capacity - self.cfg.min_share  # default keeps a floor

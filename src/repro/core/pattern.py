@@ -310,6 +310,44 @@ def fit_adaptive_ttl_arr(times: np.ndarray,
     return mu + z * sigma + cfg.ttl_base
 
 
+def fit_adaptive_ttl_batch(windows: Sequence[np.ndarray],
+                           cfg: CacheConfig) -> List[Optional[float]]:
+    """Vectorized :func:`fit_adaptive_ttl_arr` over many chronological
+    windows in one padded-matrix pass (§4 overhead lever).
+
+    The classify pass hands every node that just (re)classified RANDOM to
+    this in one call (``access_stream_tree.analyze_streams``) instead of
+    fitting per node.  Per-row decision logic (>= 3 samples, >= 2
+    non-negative gaps, the N(mu, sigma) quantile) matches the scalar form;
+    masked/padded entries contribute exact zeros to the row reductions.
+    """
+    R = len(windows)
+    if R == 0:
+        return []
+    if R == 1:
+        return [fit_adaptive_ttl_arr(
+            np.asarray(windows[0], dtype=np.float64), cfg)]
+    lens = np.fromiter((len(w) for w in windows), np.int64, R)
+    W = max(int(lens.max()), 2)
+    mat = np.zeros((R, W), np.float64)
+    for r, w in enumerate(windows):
+        mat[r, : len(w)] = w
+    diffs = mat[:, 1:] - mat[:, :-1]
+    cols = np.arange(W - 1, dtype=np.int64)[None, :]
+    valid = (cols < (lens - 1)[:, None]) & (diffs >= 0.0)
+    n = valid.sum(axis=1)
+    gaps = np.where(valid, diffs, 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mu = gaps.sum(axis=1) / np.maximum(n, 1)
+        dev = np.where(valid, diffs - mu[:, None], 0.0)
+        var = (dev * dev).sum(axis=1) / np.maximum(n - 1, 1)
+    sigma = np.sqrt(var)
+    z = normal_quantile(1.0 - cfg.ttl_significance)
+    ttl = mu + z * sigma + cfg.ttl_base
+    ok = (lens >= 3) & (n >= 2)
+    return [float(ttl[r]) if ok[r] else None for r in range(R)]
+
+
 # ---------------------------------------------------------------------------
 # Adaptive TTL (§3.3): temporal gaps ~ Normal(mu, sigma); TTL is the
 # (1 - significance) quantile plus a base time guarding against small

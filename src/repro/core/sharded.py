@@ -1,0 +1,307 @@
+"""Path-hash sharded engine behind a unified facade (scaling PR).
+
+The paper's engine is one Python state machine; every access of every job
+serializes through it.  ``ShardedIGTCache`` splits the *observe/recognize*
+hot path into N independent ``IGTCache`` shards — each with its own
+AccessStreamTree, chain/ctx caches, LevelCache and ``UnifiedCache``
+partition — while keeping *space allocation* cluster-wide, the split Hoard
+(arXiv:1812.00669) uses for distributed DL caches (shard by key, global
+placement view).
+
+Routing granularity: the **top-level path component** (the dataset root).
+A whole dataset maps to one shard, so every AccessStream — directory
+levels, file level, block level, and the CMU's flattened dataset-granular
+window — observes exactly the accesses it would observe unsharded:
+recognition state is bitwise-identical per dataset, and sharding only
+partitions *capacity*.  That skew (a hot random dataset stuck in a
+quarter-capacity shard next to sequential streams that need nothing) is
+what the cross-shard ``GlobalRebalancer`` repairs: it merges per-CMU
+``marginal_benefit`` estimates across shards and moves quota *and the
+backing shard capacity* from the cluster-wide minimum-benefit donor to the
+maximum-benefit taker, so the paper's skew-aware space allocation (§4.3)
+still operates over the whole cache.
+
+``ShardedIGTCache(n_shards=1)`` is bitwise-identical to ``IGTCache`` on
+any trace (tests/test_equivalence.py pins this): one shard holds the full
+capacity, every call forwards to it, and the global layer stays inert.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .allocation import DemandEstimate, Rebalancer, marginal_benefit
+from .cache import CacheManageUnit
+from .igtcache import EngineOptions, IGTCache, ReadOutcome
+from .meta import StoreMeta
+from .types import CacheConfig, CacheStats, PathT, Pattern
+
+
+def shard_index(path: PathT, n_shards: int) -> int:
+    """Deterministic shard for a path: CRC-32 of the top-level component.
+
+    Stable across processes and runs (unlike the salted builtin ``hash``),
+    so the same path always lands on the same shard — the routing invariant
+    tests/test_sharded.py pins.
+    """
+    if n_shards <= 1:
+        return 0
+    top = path[0] if path else ""
+    return zlib.crc32(top.encode("utf-8")) % n_shards
+
+
+class GlobalRebalancer(Rebalancer):
+    """Cross-shard space allocation: the paper's greedy max-B ← min-B rule
+    over the *merged* CMU population of all shards.
+
+    Within a shard, the per-shard ``Rebalancer`` (inside each ``IGTCache``
+    tick) already shifts quota between co-located CMUs; this layer handles
+    the moves those rounds cannot see — donor and taker living in
+    *different* shards.  A cross-shard move shifts both the CMU quota and
+    the backing pool capacity (``UnifiedCache.adjust_capacity``), so total
+    capacity is conserved and every shard keeps ``sum(quota) == capacity``.
+
+    Ghost-window coherence: shard-local rounds fire on each shard's own
+    read-triggered tick cadence and reset the per-round BufferWindow
+    counters, so at global-round time the windows of different shards span
+    different (phase-dependent) intervals.  SKEWED demand is therefore
+    measured from the windows' *cumulative* counters as a delta over this
+    layer's own round interval — every CMU is compared over the same span
+    of simulated time regardless of local reset phase.  The other patterns'
+    benefits don't read the per-round window, so ``marginal_benefit`` is
+    used as-is.
+    """
+
+    def __init__(self, cfg: CacheConfig) -> None:
+        super().__init__(cfg)
+        # cmu -> (total_hits, total_probes) at the end of our last round
+        self._ghost_mark: Dict[CacheManageUnit, Tuple[int, int]] = {}
+
+    def _estimate(self, cmu: CacheManageUnit, now: float) -> DemandEstimate:
+        est = marginal_benefit(cmu, now, self.cfg)
+        if cmu.effective_pattern() is Pattern.SKEWED:
+            bw = cmu.buffer_window
+            th, tp = self._ghost_mark.get(cmu, (0, 0))
+            dh, dp = bw.total_hits - th, bw.total_probes - tp
+            f = dh / dp if dp else 0.0
+            est = DemandEstimate(cmu.arrival_rate(now) * f / bw.w,
+                                 dh > 0, est.can_shrink)
+        return est
+
+    def rebalance_shards(self, shards: Sequence[IGTCache], now: float,
+                         max_moves: Optional[int] = None) -> List[tuple]:
+        self.last_round = now
+        owner: Dict[CacheManageUnit, IGTCache] = {}
+        takers_pool: List[CacheManageUnit] = []
+        donors_pool: List[CacheManageUnit] = []
+        for eng in shards:
+            for c in eng.workload_cmus():
+                owner[c] = eng
+                takers_pool.append(c)
+                donors_pool.append(c)
+            # A shard's *default* CMU donates cross-shard too (never takes):
+            # otherwise a shard whose datasets happen to be all-sequential —
+            # or that drew no dataset at all — holds 1/N of the cluster
+            # capacity hostage.  Mirrors the shard-local round, which also
+            # passes the default CMU to the rebalancer as a donor.
+            d = eng.cache.default_cmu
+            owner[d] = eng
+            donors_pool.append(d)
+        moves: List[tuple] = []
+        if not takers_pool or len(shards) < 2:
+            self._mark_ghosts(donors_pool)
+            return moves
+        if max_moves is None:
+            max_moves = len(donors_pool)
+        est = {c: self._estimate(c, now) for c in donors_pool}
+        for _ in range(max_moves):
+            takers = [c for c in takers_pool if est[c].wants_more]
+            if not takers:
+                break
+            taker = max(takers, key=lambda c: est[c].benefit)
+            # donors restricted to OTHER shards: co-located pairs are the
+            # shard-local rebalancer's job
+            donors = [c for c in donors_pool
+                      if est[c].can_shrink and owner[c] is not owner[taker]]
+            got = self.pick_move(est, donors, [taker])
+            if got is None:
+                break
+            donor, taker, amt = got
+            d_eng, t_eng = owner[donor], owner[taker]
+            donor.set_quota(donor.quota - amt)
+            d_eng.cache.adjust_capacity(-amt)
+            t_eng.cache.adjust_capacity(amt)
+            taker.set_quota(taker.quota + amt)
+            moves.append((donor, taker, amt))
+            est[donor] = self._estimate(donor, now)
+            est[taker] = self._estimate(taker, now)
+        self._mark_ghosts(donors_pool)
+        return moves
+
+    def _mark_ghosts(self, cmus: Sequence[CacheManageUnit]) -> None:
+        """Start the next measurement interval at the current cumulative
+        ghost counters (dropping marks of TTL-removed CMUs)."""
+        self._ghost_mark = {
+            c: (c.buffer_window.total_hits, c.buffer_window.total_probes)
+            for c in cmus}
+
+
+class ShardedIGTCache:
+    """N path-hash ``IGTCache`` shards behind the engine's public API.
+
+    Exactly the surface callers use — ``read``, ``read_batch``,
+    ``read_serial``, ``complete_prefetch``, ``cancel_prefetch``, ``pin``,
+    ``never_cache``, ``tick``, ``stats``, ``hit_ratio``, ``snapshot`` —
+    so the cluster simulator, the training pipeline and the baselines run
+    sharded without knowing it.
+    """
+
+    def __init__(self, meta: StoreMeta, capacity: int,
+                 cfg: Optional[CacheConfig] = None,
+                 options: Optional[EngineOptions] = None,
+                 n_shards: int = 1) -> None:
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.meta = meta
+        self.cfg = cfg or CacheConfig()
+        self.options = options or EngineOptions()
+        self.n_shards = n_shards
+        self.capacity = capacity
+        base, rem = divmod(capacity, n_shards)
+        self.shards: List[IGTCache] = [
+            IGTCache(meta, base + (1 if i < rem else 0), cfg=self.cfg,
+                     options=self.options)
+            for i in range(n_shards)
+        ]
+        self.global_rebalancer = GlobalRebalancer(self.cfg)
+        # top-level component -> shard id (datasets are few; unbounded is fine)
+        self._route: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- routing
+    def shard_id(self, path: PathT) -> int:
+        if self.n_shards == 1:
+            return 0
+        top = path[0] if path else ""
+        sid = self._route.get(top)
+        if sid is None:
+            sid = shard_index(path, self.n_shards)
+            self._route[top] = sid
+        return sid
+
+    def shard_for(self, path: PathT) -> IGTCache:
+        return self.shards[self.shard_id(path)]
+
+    # ------------------------------------------------------------ user API
+    def pin(self, path: PathT) -> None:
+        for s in self.shards:          # prefix may be shorter than the
+            s.pin(path)                # routing key — broadcast is exact
+
+    def never_cache(self, path: PathT) -> None:
+        for s in self.shards:
+            s.never_cache(path)
+
+    def invalidate_meta_cache(self) -> None:
+        for s in self.shards:
+            s.invalidate_meta_cache()
+
+    # ------------------------------------------------------------------ read
+    def read(self, file_path: PathT, offset: int, size: int,
+             now: float) -> ReadOutcome:
+        return self.shard_for(file_path).read(file_path, offset, size, now)
+
+    def read_serial(self, file_path: PathT, offset: int, size: int,
+                    now: float) -> ReadOutcome:
+        return self.shard_for(file_path).read_serial(file_path, offset,
+                                                     size, now)
+
+    def read_batch(self, requests: Sequence[Tuple[PathT, int, int]],
+                   now: float) -> List[ReadOutcome]:
+        """Split the batch by shard, serve each sub-batch on its shard
+        (tick cadence amortized per shard, as in the unsharded engine),
+        and reassemble outcomes in the original request order."""
+        if self.n_shards == 1:
+            return self.shards[0].read_batch(requests, now)
+        buckets: Dict[int, List[Tuple[int, Tuple[PathT, int, int]]]] = {}
+        for i, req in enumerate(requests):
+            buckets.setdefault(self.shard_id(req[0]), []).append((i, req))
+        outs: List[Optional[ReadOutcome]] = [None] * len(requests)
+        for sid, items in buckets.items():
+            got = self.shards[sid].read_batch([r for _, r in items], now)
+            for (i, _), out in zip(items, got):
+                outs[i] = out
+        return outs  # type: ignore[return-value]
+
+    # ------------------------------------------------------------- prefetch
+    def complete_prefetch(self, path: PathT, size: int, now: float) -> bool:
+        return self.shard_for(path).complete_prefetch(path, size, now)
+
+    def cancel_prefetch(self, path: PathT) -> None:
+        self.shard_for(path).cancel_prefetch(path)
+
+    # ------------------------------------------------------------------ tick
+    def tick(self, now: float) -> None:
+        """Per-shard maintenance plus, when due, the cross-shard allocation
+        round.  The global layer is phase-independent of the shards'
+        read-triggered local rounds: SKEWED demand is measured from
+        cumulative ghost counters over the global round's own interval
+        (see GlobalRebalancer), so ordering here is not load-bearing."""
+        if (self.n_shards > 1 and self.options.allocation == "adaptive"
+                and self.global_rebalancer.due(now)):
+            self.global_rebalancer.rebalance_shards(self.shards, now)
+        for s in self.shards:
+            s.tick(now)
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def stats(self) -> CacheStats:
+        """Point-in-time merge of the shards' counters.
+
+        Unlike ``IGTCache.stats`` this is a *snapshot*, not the live
+        counter object — re-read the property for fresh values.  The
+        semantic is deliberately identical at every shard count (a live
+        view would only be possible at ``n_shards == 1``)."""
+        return CacheStats.merged(s.stats for s in self.shards)
+
+    def hit_ratio(self) -> float:
+        return self.stats.hit_ratio
+
+    def used_bytes(self) -> int:
+        return sum(s.cache.used_bytes() for s in self.shards)
+
+    def node_count(self) -> int:
+        return sum(s.tree.node_count() for s in self.shards)
+
+    def workload_cmus(self) -> List[CacheManageUnit]:
+        return [c for s in self.shards for c in s.workload_cmus()]
+
+    def iter_workload_cmus(self):
+        for s in self.shards:
+            yield from s.iter_workload_cmus()
+
+    def shard_capacities(self) -> List[int]:
+        return [s.cache.capacity for s in self.shards]
+
+    def snapshot(self) -> dict:
+        s = self.stats.snapshot()
+        s["nodes"] = self.node_count()
+        s["cmus"] = sum(len(sh.cache.cmus) - 1 for sh in self.shards)
+        s["used_bytes"] = self.used_bytes()
+        return s
+
+
+# Either engine satisfies the same public read/prefetch/tick/stats surface;
+# callers (cluster sim, training pipeline, benchmarks) annotate with this.
+Engine = Union[IGTCache, ShardedIGTCache]
+
+
+def make_engine(meta: StoreMeta, capacity: int,
+                cfg: Optional[CacheConfig] = None,
+                options: Optional[EngineOptions] = None,
+                n_shards: int = 1) -> Engine:
+    """Engine constructor shared by sim/benchmarks/examples: the plain
+    state machine for ``n_shards=1`` (zero facade overhead), the sharded
+    facade otherwise."""
+    if n_shards == 1:
+        return IGTCache(meta, capacity, cfg=cfg, options=options)
+    return ShardedIGTCache(meta, capacity, cfg=cfg, options=options,
+                           n_shards=n_shards)

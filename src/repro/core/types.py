@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Iterable, Optional, Tuple
 
 # Path components are strings; a full block key is the file path plus a block
 # ordinal, e.g. ("ImageNet", "train", "n01491361", "4716.JPEG", "#0").
@@ -107,6 +107,23 @@ class CacheStats:
     def hit_ratio(self) -> float:
         n = self.accesses
         return self.hits / n if n else 0.0
+
+    def merge(self, other: "CacheStats") -> "CacheStats":
+        """Accumulate another engine's counters (shard-mergeable stats: the
+        ShardedIGTCache facade sums its shards' CacheStats into one view).
+        Iterates the dataclass fields so counters added later merge too."""
+        import dataclasses
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other,
+                                                                  f.name))
+        return self
+
+    @classmethod
+    def merged(cls, parts: "Iterable[CacheStats]") -> "CacheStats":
+        out = cls()
+        for p in parts:
+            out.merge(p)
+        return out
 
     def snapshot(self) -> dict:
         return {

@@ -22,10 +22,14 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from ..core import IGTCache
+from ..core.sharded import Engine
 from ..core.types import MB, PathT
 from ..storage.datasets import DatasetSpec, make_dataset
 from ..storage.object_store import RemoteStore
+
+# The pipeline only touches the engine's public read/prefetch surface, so
+# the path-hash sharded facade (multiple token datasets spread over shards)
+# drops in wherever the single state machine did.
 
 
 def make_token_dataset(name: str, n_shards: int, shard_bytes: int) -> DatasetSpec:
@@ -36,7 +40,7 @@ def make_token_dataset(name: str, n_shards: int, shard_bytes: int) -> DatasetSpe
 class PrefetchWorker(threading.Thread):
     """Background fetcher: engine candidates → store → complete_prefetch."""
 
-    def __init__(self, engine: IGTCache, store: RemoteStore) -> None:
+    def __init__(self, engine: Engine, store: RemoteStore) -> None:
         super().__init__(daemon=True)
         self.engine = engine
         self.store = store
@@ -82,7 +86,7 @@ class PipelineStats:
 class CachedTokenPipeline:
     """Epoch-random LM batches served through the unified cache."""
 
-    def __init__(self, store: RemoteStore, engine: IGTCache, dataset: str,
+    def __init__(self, store: RemoteStore, engine: Engine, dataset: str,
                  *, seq_len: int, batch: int, vocab: int, seed: int = 0,
                  sample_bytes: Optional[int] = None,
                  background_prefetch: bool = True,

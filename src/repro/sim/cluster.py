@@ -18,7 +18,11 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from ..core import IGTCache, block_key
+# The simulator drives the engine only through its public surface
+# (read_batch / complete_prefetch / tick / hit_ratio / snapshot /
+# iter_workload_cmus), so the sharded facade slots in unchanged.
+from ..core.sharded import Engine
+from ..core import block_key
 from ..core.types import PathT
 from .link import SharedLink
 from .workloads import Job, WorkloadSuite
@@ -40,7 +44,7 @@ class SimResult:
 
 
 class ClusterSim:
-    def __init__(self, suite: WorkloadSuite, engine: IGTCache,
+    def __init__(self, suite: WorkloadSuite, engine: Engine,
                  bandwidth_Bps: float = 125e6, latency_s: float = 0.150,
                  local_latency_s: float = 0.0005,
                  local_bandwidth_Bps: float = 6e9,
@@ -184,9 +188,7 @@ class ClusterSim:
     def _sample_alloc(self) -> None:
         from ..core.allocation import marginal_benefit
         row = {"t": self.now}
-        for path, cmu in self.engine.cache.cmus.items():
-            if cmu is self.engine.cache.default_cmu:
-                continue
+        for path, cmu in self.engine.iter_workload_cmus():
             est = marginal_benefit(cmu, self.now, self.engine.cfg)
             row["/".join(path)] = {"quota": cmu.quota, "used": cmu.used,
                                    "benefit": est.benefit}

@@ -20,3 +20,9 @@ def test_overhead_smoke_emits_json(tmp_path):
     assert at10k["nodes"] > 0
     assert "seed_reference" in payload
     assert "speedup_vs_pr1_start_seed" in payload
+    # sharded-facade axis: both shard counts measured (interleaved) into the
+    # perf trajectory
+    for n in ("1", "4"):
+        point = payload["sharded"][n]
+        assert point["us_per_access"] > 0
+        assert point["nodes"] > 0

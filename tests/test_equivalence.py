@@ -11,10 +11,10 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import CacheConfig, IGTCache, Pattern, bundle
+from repro.core import CacheConfig, IGTCache, Pattern, ShardedIGTCache, bundle
 from repro.core.access_stream_tree import AccessStreamTree
 from repro.core.pattern import (classify, classify_batch, fit_adaptive_ttl,
-                                fit_adaptive_ttl_arr)
+                                fit_adaptive_ttl_arr, fit_adaptive_ttl_batch)
 from repro.core.types import AccessRecord, MB
 from repro.storage import RemoteStore, make_dataset
 from repro.sim.workloads import (random_files, seq_blocks, seq_files,
@@ -131,6 +131,51 @@ def test_read_batch_matches_reads_between_tick_boundaries():
     assert a.snapshot() == b.snapshot()
 
 
+@pytest.mark.parametrize("seed", [0, 7])
+def test_sharded_n1_bitwise_identical_to_engine(seed):
+    """ShardedIGTCache(n_shards=1) IS the engine: identical ReadOutcomes,
+    stats and tree state on the seeded mixed traces (the facade forwards
+    everything to one full-capacity shard and its global layer stays
+    inert)."""
+    store = mk_store()
+    mono = IGTCache(store, 192 * MB, cfg=CFG)
+    facade = ShardedIGTCache(store, 192 * MB, cfg=CFG, n_shards=1)
+    t = 0.0
+    for k, (fp, off, sz) in enumerate(mixed_trace(store, seed)):
+        om = mono.read(fp, off, sz, t)
+        of = facade.read(fp, off, sz, t)
+        assert outcome_tuple(om) == outcome_tuple(of), \
+            f"divergence at access {k}: {fp} off={off}"
+        for p, s in om.prefetches:
+            mono.complete_prefetch(p, s, t)
+        for p, s in of.prefetches:
+            facade.complete_prefetch(p, s, t)
+        t += 0.011
+    assert mono.snapshot() == facade.snapshot()
+    assert mono.stats.snapshot() == facade.stats.snapshot()
+    assert mono.tree.node_count() == facade.node_count()
+
+
+def test_sharded_n1_read_batch_matches_engine():
+    store = mk_store()
+    mono = IGTCache(store, 192 * MB, cfg=CFG)
+    facade = ShardedIGTCache(store, 192 * MB, cfg=CFG, n_shards=1)
+    reqs = mixed_trace(store, 11)[:600]
+    t = 0.0
+    for i in range(0, len(reqs), 8):
+        group = reqs[i:i + 8]
+        outs_m = mono.read_batch(group, t)
+        outs_f = facade.read_batch(group, t)
+        assert [outcome_tuple(o) for o in outs_m] == \
+            [outcome_tuple(o) for o in outs_f]
+        for outs, eng in ((outs_m, mono), (outs_f, facade)):
+            for o in outs:
+                for p, s in o.prefetches:
+                    eng.complete_prefetch(p, s, t)
+        t += 0.01
+    assert mono.snapshot() == facade.snapshot()
+
+
 # ---------------------------------------------------------------------------
 # vectorized analytics vs the scalar reference implementations
 # ---------------------------------------------------------------------------
@@ -206,6 +251,28 @@ def test_fit_adaptive_ttl_arr_matches_scalar():
             assert got is None
         else:
             assert got == pytest.approx(ref, rel=1e-9)
+
+
+def test_fit_adaptive_ttl_batch_matches_arr():
+    """The one-matrix-pass TTL fit (all due-random nodes per classify pass)
+    agrees with the per-window reference, including degenerate windows and
+    out-of-order timestamps mid-batch."""
+    cfg = CacheConfig()
+    rng = np.random.default_rng(3)
+    windows = []
+    for n in (0, 1, 2, 3, 4, 10, 37, 100):
+        windows.append(np.cumsum(rng.exponential(2.0, n)))
+    shuffled = rng.exponential(2.0, 20)      # negative diffs get filtered
+    windows.append(shuffled)
+    got = fit_adaptive_ttl_batch(windows, cfg)
+    assert len(got) == len(windows)
+    for w, g in zip(windows, got):
+        ref = fit_adaptive_ttl_arr(np.asarray(w, dtype=np.float64), cfg)
+        if ref is None:
+            assert g is None
+        else:
+            assert g == pytest.approx(ref, rel=1e-9)
+    assert fit_adaptive_ttl_batch([], cfg) == []
 
 
 def test_node_cap_leaf_lru_detaches_childless_first():

@@ -1,0 +1,229 @@
+"""Sharded-engine invariants (PR-2 tentpole).
+
+Routing: same path → same shard, always, across facade instances (the hash
+is process-stable).  Batching: ``read_batch`` splits a batch by shard but
+returns outcomes in the original request order.  Allocation: the
+cross-shard GlobalRebalancer conserves total capacity and every shard's
+``sum(quota) == capacity`` invariant.  End-to-end: the paper-suite cluster
+sim at ``n_shards=4`` stays within 2 % CHR of the unsharded engine
+(bitwise equivalence at ``n_shards=1`` is pinned in test_equivalence.py).
+"""
+import pytest
+
+from repro.core import (CacheConfig, GlobalRebalancer, IGTCache, Pattern,
+                        ShardedIGTCache, bundle_engine, make_engine,
+                        shard_index)
+from repro.core.types import MB
+from repro.sim import ClusterSim, make_paper_suite
+from repro.storage import RemoteStore, make_dataset
+
+CFG = CacheConfig(min_share=8 * MB, rebalance_quantum=8 * MB,
+                  rebalance_period=5.0, node_cap=300, window=20,
+                  reanalyze_every=10)
+
+
+def mk_store(n_datasets=6):
+    store = RemoteStore()
+    for i in range(n_datasets):
+        store.add(make_dataset(f"ds{i}", "dir_tree", n_dirs=4,
+                               files_per_dir=8, small_file_size=512 * 1024))
+    return store
+
+
+# ------------------------------------------------------------------ routing
+
+def test_same_path_same_shard_always():
+    store = mk_store()
+    a = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=4)
+    b = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=4)
+    for ds in store.datasets.values():
+        for f in ds.files:
+            sid = a.shard_id(f.path)
+            # stable across repeated calls, facade instances, and the free
+            # function; block paths route with their file
+            assert a.shard_id(f.path) == sid
+            assert b.shard_id(f.path) == sid
+            assert shard_index(f.path, 4) == sid
+            assert a.shard_id(f.path + ("#0",)) == sid
+
+
+def test_routing_only_uses_top_level_component():
+    """A dataset never straddles shards: every stream (directory, file,
+    block level) observes exactly its unsharded access sequence."""
+    store = mk_store()
+    eng = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=4)
+    for ds in store.datasets.values():
+        sids = {eng.shard_id(f.path) for f in ds.files}
+        assert len(sids) == 1
+
+
+def test_reads_land_on_routed_shard():
+    store = mk_store()
+    eng = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=4)
+    f = store.datasets["ds0"].files[0]
+    eng.read(f.path, 0, f.size, 0.0)
+    sid = eng.shard_id(f.path)
+    for i, shard in enumerate(eng.shards):
+        expect = 1 if i == sid else 0
+        assert shard.stats.accesses == expect
+
+
+# ----------------------------------------------------------------- batching
+
+def test_read_batch_preserves_request_order():
+    store = mk_store()
+    mono = IGTCache(store, 64 * MB, cfg=CFG)
+    eng = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=4)
+    # interleave datasets so consecutive requests hit different shards
+    files = []
+    dss = list(store.datasets.values())
+    for i in range(8):
+        for ds in dss:
+            files.append(ds.files[i])
+    reqs = [(f.path, 0, f.size) for f in files]
+    t = 0.0
+    for _ in range(3):
+        outs = eng.read_batch(reqs, t)
+        ref = mono.read_batch(reqs, t)
+        assert len(outs) == len(reqs)
+        for (fp, off, sz), out, r in zip(reqs, outs, ref):
+            # outcome i describes request i: same block keys as unsharded
+            assert [b.key for b in out.blocks] == [b.key for b in r.blocks]
+        for o in outs:
+            for p, s in o.prefetches:
+                eng.complete_prefetch(p, s, t)
+        for o in ref:
+            for p, s in o.prefetches:
+                mono.complete_prefetch(p, s, t)
+        t += 0.5
+
+
+# --------------------------------------------------------------- allocation
+
+def _drive(eng, store, reps=40, t0=0.0, dt=0.05):
+    """Skewed traffic on ds0, sequential scan on ds1 — promotes CMUs with
+    opposite marginal benefit."""
+    t = t0
+    hot = store.datasets["ds0"].files[:3]
+    for r in range(reps):
+        for f in hot:                      # revisit a hot set (skew)
+            out = eng.read(f.path, 0, f.size, t)
+            t += dt
+        f = store.datasets["ds1"].files[r % 32]
+        eng.read(f.path, 0, f.size, t)     # one sequential step
+        t += dt
+    return t
+
+
+def test_cross_shard_rebalance_conserves_capacity():
+    store = mk_store()
+    cap = 64 * MB
+    eng = ShardedIGTCache(store, cap, cfg=CFG, n_shards=4)
+    assert sum(eng.shard_capacities()) == cap
+    t = _drive(eng, store)
+    for k in range(1, 30):
+        eng.tick(t + k * CFG.rebalance_period)
+        assert sum(eng.shard_capacities()) == cap
+        for s in eng.shards:
+            assert s.cache.quota_invariant_ok()
+            assert sum(c.quota for c in s.cache.cmus.values()) \
+                == s.cache.capacity
+
+
+def test_global_rebalancer_moves_toward_demand():
+    """A skewed CMU with ghost-window demand pulls capacity from another
+    shard's idle default pool."""
+    store = mk_store()
+    s0 = IGTCache(store, 32 * MB, cfg=CFG)
+    s1 = IGTCache(store, 32 * MB, cfg=CFG)
+    cmu = s0.cache.create_cmu(("ds0",), 128 * MB, now=0.0)
+    cmu.flat_pattern = Pattern.SKEWED
+    for i in range(50):                      # arrival rate + ghost hits
+        cmu.note_access(i * 0.01)
+        cmu.buffer_window.on_evict(f"k{i}")
+        cmu.buffer_window.probe(f"k{i}")
+    reb = GlobalRebalancer(CFG)
+    before = (s0.cache.capacity, s1.cache.capacity)
+    moves = reb.rebalance_shards([s0, s1], now=CFG.rebalance_period + 1.0)
+    assert moves, "expected at least one cross-shard move"
+    assert s0.cache.capacity > before[0]
+    assert s1.cache.capacity < before[1]
+    assert s0.cache.capacity + s1.cache.capacity == sum(before)
+    for s in (s0, s1):
+        assert sum(c.quota for c in s.cache.cmus.values()) \
+            == s.cache.capacity
+
+
+def test_global_estimate_survives_local_window_reset():
+    """Shard-local rounds reset the per-round ghost counters on their own
+    read-triggered phase; the global layer must still see a skewed CMU's
+    demand (it measures cumulative-counter deltas over its own interval)."""
+    store = mk_store()
+    s0 = IGTCache(store, 32 * MB, cfg=CFG)
+    s1 = IGTCache(store, 32 * MB, cfg=CFG)
+    cmu = s0.cache.create_cmu(("ds0",), 128 * MB, now=0.0)
+    cmu.flat_pattern = Pattern.SKEWED
+    for i in range(50):
+        cmu.note_access(i * 0.01)
+        cmu.buffer_window.on_evict(f"k{i}")
+        cmu.buffer_window.probe(f"k{i}")
+    # a local round fired a moment ago and zeroed the per-round window
+    cmu.buffer_window.reset_window()
+    assert cmu.buffer_window.hit_frequency() == 0.0
+    reb = GlobalRebalancer(CFG)
+    moves = reb.rebalance_shards([s0, s1], now=CFG.rebalance_period + 1.0)
+    assert moves, "reset phase must not hide cross-shard demand"
+    # next interval starts at the marks: no new ghost traffic -> no demand
+    moves2 = reb.rebalance_shards([s0, s1],
+                                  now=2 * CFG.rebalance_period + 2.0)
+    assert not moves2
+
+
+def test_single_shard_never_globally_rebalances():
+    store = mk_store()
+    eng = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=1)
+    t = _drive(eng, store)
+    eng.tick(t + CFG.rebalance_period + 1.0)
+    assert eng.shard_capacities() == [64 * MB]
+
+
+# ------------------------------------------------------------- constructors
+
+def test_make_engine_dispatch():
+    store = mk_store()
+    assert isinstance(make_engine(store, 64 * MB, cfg=CFG), IGTCache)
+    eng = make_engine(store, 64 * MB, cfg=CFG, n_shards=4)
+    assert isinstance(eng, ShardedIGTCache)
+    assert eng.n_shards == 4
+    jfs = bundle_engine("juicefs", store, 64 * MB, cfg=CFG, n_shards=2)
+    assert isinstance(jfs, ShardedIGTCache)
+    assert jfs.options.name == "juicefs"
+    with pytest.raises(ValueError):
+        ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=0)
+
+
+# ------------------------------------------------------- end-to-end cluster
+
+def test_sharded_cluster_sim_hit_ratio_within_2pct():
+    """Paper-suite cluster sim (scaled): n_shards=4 CHR within 2 % of the
+    unsharded engine — capacity partitioning plus the global rebalancer
+    must not cost recognition quality (routing keeps datasets whole)."""
+    def scaled_cfg(capacity):
+        share = max(16 * MB, capacity // 128)
+        return CacheConfig(min_share=share, rebalance_quantum=share,
+                           rebalance_period=10.0,
+                           prefetch_budget_bytes=max(64 * MB, capacity // 8))
+
+    suite = make_paper_suite(scale=0.15, seed=0,
+                             job_filter=[2, 8, 9, 14, 16])
+    store = RemoteStore()
+    for ds in suite.datasets.values():
+        store.add(ds)
+    cap = int(0.35 * suite.total_bytes())
+    mono = ClusterSim(suite, IGTCache(store, cap, cfg=scaled_cfg(cap))).run()
+    eng = ShardedIGTCache(store, cap, cfg=scaled_cfg(cap), n_shards=4)
+    shard = ClusterSim(suite, eng).run()
+    assert sum(eng.shard_capacities()) == cap
+    assert abs(mono.hit_ratio - shard.hit_ratio) <= 0.02, \
+        f"CHR drift: unsharded={mono.hit_ratio:.4f} " \
+        f"sharded4={shard.hit_ratio:.4f}"

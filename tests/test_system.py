@@ -16,6 +16,8 @@ from repro.storage import RemoteStore
 from repro.train.optimizer import AdamWConfig, init_state
 from repro.train.train_step import make_train_step
 
+from conftest import requires_mesh_axis_types
+
 
 @pytest.fixture(scope="module")
 def world():
@@ -26,6 +28,7 @@ def world():
     return store, cfg
 
 
+@requires_mesh_axis_types
 def test_pipeline_trains_through_cache(world):
     store, ccfg = world
     engine = IGTCache(store, 16 * MB, cfg=ccfg)

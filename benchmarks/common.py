@@ -10,7 +10,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 sys.path.insert(0, str(REPO_ROOT / "src"))
 
-from repro.core import CacheConfig, IGTCache, bundle  # noqa: E402
+from repro.core import CacheConfig, bundle_client  # noqa: E402
 from repro.core.types import MB  # noqa: E402
 from repro.sim import ClusterSim, make_paper_suite  # noqa: E402
 from repro.storage import RemoteStore  # noqa: E402
@@ -40,11 +40,11 @@ def build_world(scale: float = 1.0, seed: int = 0, job_filter=None,
 def run_sim(suite, store, cap, bundle_name: str, cfg: CacheConfig = None,
             capacity_override: int = None, **sim_kw):
     capacity = cap if capacity_override is None else capacity_override
-    eng = IGTCache(store, capacity, cfg=cfg or scaled_cfg(cap),
-                   options=bundle(bundle_name))
-    sim = ClusterSim(suite, eng, **sim_kw)
+    client = bundle_client(bundle_name, store, capacity,
+                           cfg=cfg or scaled_cfg(cap))
+    sim = ClusterSim(suite, client, **sim_kw)
     res = sim.run()
-    return res, eng
+    return res, client.engine
 
 
 def csv_row(name: str, value, derived: str = "") -> str:

@@ -1,21 +1,172 @@
-"""Fig. 9 — prefetching schemes on prefetch-sensitive jobs.
+"""Fig. 9 — prefetching schemes on prefetch-sensitive jobs — plus the
+client-path overhead axis (PR 3).
 
 Baselines: stride, enhanced-stride (JuiceFS default), SFP (file-Markov),
 none; IGTCache runs with prefetch adaptivity only (eviction/allocation
 fixed, as §5.2 does).  Also reproduces the two ablations: hierarchical
 prefetching on the ICOADS location scan (job-4) and statistical prefetching
 on the fine-tune job (job-7).
+
+The **client-path axis** measures what the CacheClient layer costs on top
+of the bare kernel: the same seeded trace is driven through (a) the
+caller-driven kernel loop (read + inline complete_prefetch — the PR-2
+reference), (b) ``CacheClient`` + ``SimExecutor``, and (c) ``CacheClient``
++ ``ThreadedExecutor`` (per-shard background workers; flushed inside the
+timed region so completions are paid for).  Runs are interleaved
+(best-of-N, GC paused — the docs/PERF.md protocol) and the three points
+land in ``BENCH_overhead.json`` under ``client_path`` next to the kernel
+trajectory.  ``--smoke`` runs a down-scaled client axis for the test job.
 """
 from __future__ import annotations
 
-from .common import build_world, csv_row, run_sim
+import argparse
+import gc
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# .common bootstraps sys.path with REPO_ROOT/src — must import before repro
+from .common import REPO_ROOT, build_world, csv_row, run_sim
+
+from repro.core import (CacheConfig, IGTCache, SimExecutor, ThreadedExecutor,
+                        open_cache)
+from repro.core.types import MB
+from repro.storage import RemoteStore, make_dataset
 
 JOBS = [1, 2, 4, 5, 6, 8, 11]      # sequential, prefetch-sensitive (§5.2)
 BUNDLES = ["prefetch_igt", "prefetch_stride", "prefetch_enhanced",
            "prefetch_sfp", "prefetch_none"]
 
 
-def main(scale: float = 1.0, seed: int = 0):
+# ---------------------------------------------------------------- client axis
+
+def _client_world():
+    store = RemoteStore()
+    store.add(make_dataset("ds", "dir_tree", n_dirs=40, files_per_dir=60,
+                           small_file_size=9 * MB))
+    cfg = CacheConfig(node_cap=10_000, min_share=8 * MB,
+                      rebalance_quantum=8 * MB)
+    return store, cfg
+
+
+def _trace(files, n_accesses: int, seed: int):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(files), n_accesses)
+    offs = rng.integers(0, 2, n_accesses)
+    return idx, offs
+
+
+def _timed(fn) -> float:
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+
+
+def _run_kernel(store, cfg, n_accesses, seed) -> float:
+    eng = IGTCache(store, 512 * MB, cfg=cfg)
+    files = store.datasets["ds"].files
+    idx, offs = _trace(files, n_accesses, seed)
+
+    def go():
+        for i, j in enumerate(idx):
+            f = files[int(j)]
+            out = eng.read(f.path, int(offs[i]) * 4 * MB, 64 * 1024,
+                           time.monotonic())
+            for p, s in out.prefetches:
+                eng.complete_prefetch(p, s, time.monotonic())
+
+    return _timed(go) / n_accesses * 1e6
+
+
+def _run_client(store, cfg, n_accesses, seed, threaded: bool) -> float:
+    executor = (ThreadedExecutor(max_fetch_bytes=0) if threaded
+                else SimExecutor())
+    client = open_cache(store, 512 * MB, cfg=cfg, executor=executor)
+    files = store.datasets["ds"].files
+    idx, offs = _trace(files, n_accesses, seed)
+
+    def go():
+        for i, j in enumerate(idx):
+            f = files[int(j)]
+            client.read(f.path, int(offs[i]) * 4 * MB, 64 * 1024)
+        client.flush(timeout=60.0)      # pay for in-flight completions
+
+    us = _timed(go) / n_accesses * 1e6
+    client.close()
+    return us
+
+
+def client_axis(smoke: bool = False, seed: int = 0, json_path=None):
+    """Interleaved kernel vs SimExecutor-client vs ThreadedExecutor-client
+    sweep; merged into BENCH_overhead.json's ``client_path`` section."""
+    n_accesses = 4_000 if smoke else 20_000
+    repeats = 2 if smoke else 3
+    protocols = {
+        "kernel_loop": lambda st, cf: _run_kernel(st, cf, n_accesses, seed),
+        "client_sim": lambda st, cf: _run_client(st, cf, n_accesses, seed,
+                                                 threaded=False),
+        "client_threaded": lambda st, cf: _run_client(st, cf, n_accesses,
+                                                      seed, threaded=True),
+    }
+    best = {}
+    for _ in range(repeats):
+        for name, fn in protocols.items():     # interleaved, same protocol
+            store, cfg = _client_world()
+            us = fn(store, cfg)
+            if name not in best or us < best[name]:
+                best[name] = us
+    rows = []
+    section = {"n_accesses": n_accesses, "repeats": repeats, "smoke": smoke}
+    for name, us in best.items():
+        section[name] = {"us_per_access": round(us, 1)}
+        rows.append(csv_row(f"client_path.{name}.us_per_access",
+                            round(us, 1), "interleaved-protocol"))
+    section["client_overhead_pct"] = round(
+        (best["client_sim"] / best["kernel_loop"] - 1) * 100, 1)
+    rows.append(csv_row("client_path.sim_overhead_vs_kernel_pct",
+                        section["client_overhead_pct"]))
+    _merge_overhead_json(section, json_path)
+    return rows
+
+
+def _merge_overhead_json(section: dict, json_path=None) -> Path:
+    """Read-modify-write the shared perf-trajectory file: the client axis
+    lands next to the kernel/sharded numbers without clobbering them.
+    Smoke runs land in the smoke file so they never overwrite the
+    canonical full-sweep record (same convention as overhead.py)."""
+    if json_path is not None:
+        out = Path(json_path)
+    elif section.get("smoke"):
+        out = REPO_ROOT / "BENCH_overhead_smoke.json"
+    else:
+        out = REPO_ROOT / "BENCH_overhead.json"
+    payload = {}
+    if out.exists():
+        try:
+            payload = json.loads(out.read_text())
+        except ValueError:
+            payload = {}
+    payload["client_path"] = section
+    payload.setdefault("bench", "overhead")
+    payload["generated_unix"] = round(time.time(), 1)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] merged client_path into {out}", flush=True)
+    return out
+
+
+def main(scale: float = 1.0, seed: int = 0, smoke: bool = False,
+         json_path=None):
+    if smoke:
+        return client_axis(smoke=True, seed=seed, json_path=json_path)
     suite, store, cap = build_world(scale=scale, seed=seed, job_filter=JOBS)
     rows = []
     jcts = {}
@@ -55,8 +206,17 @@ def main(scale: float = 1.0, seed: int = 0):
     res_u, _ = run_sim(suite7, store7, cap7, "prefetch_none")
     rows.append(csv_row("fig9.statistical.job7_jct_s", round(res_s.jct[7], 1),
                         f"noprefetch={res_u.jct[7]:.1f} paper_epoch1=-6.8%"))
+
+    # --- client-path overhead axis (PR 3) --------------------------------
+    rows.extend(client_axis(smoke=False, seed=seed, json_path=json_path))
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="down-scaled client-path axis only (test job)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=float, default=1.0)
+    args = ap.parse_args()
+    main(scale=args.scale, seed=args.seed, smoke=args.smoke)

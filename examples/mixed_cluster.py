@@ -10,7 +10,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import CacheConfig, IGTCache, bundle
+from repro.core import CacheConfig, bundle_client
 from repro.core.types import MB
 from repro.sim import ClusterSim, make_paper_suite
 from repro.storage import RemoteStore
@@ -35,10 +35,12 @@ def main():
           f"cache {cap >> 20} MB (35%)\n")
     results = {}
     for name in ("igtcache", "juicefs", "nocache"):
-        eng = IGTCache(store, 0 if name == "nocache" else cap, cfg=cfg,
-                       options=bundle("prefetch_none" if name == "nocache"
-                                      else name))
-        res = ClusterSim(suite, eng).run()
+        # one constructor path for every consumer: the sim swaps the
+        # client's prefetch transport onto its simulated link internally
+        client = bundle_client("prefetch_none" if name == "nocache" else name,
+                               store, 0 if name == "nocache" else cap,
+                               cfg=cfg)
+        res = ClusterSim(suite, client).run()
         results[name] = res
         print(f"{name:10s} avg JCT {res.avg_jct:8.1f}s   "
               f"CHR {res.hit_ratio:.3f}   makespan {res.makespan:7.0f}s")

@@ -4,6 +4,11 @@ Three workloads hit one unified cache: a sequential scan, random training
 epochs, and zipf-hot RAG queries.  The engine classifies each stream from its
 access gaps (K-S test) and picks prefetch/eviction per stream — no hints.
 
+The cache is opened through the client API (``open_cache``): the client
+owns prefetch execution (here the deterministic ``SimExecutor`` — this
+script drives a virtual clock) and can return the actual bytes, so no
+caller ever loops over prefetch candidates by hand.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -15,14 +20,9 @@ import random
 
 import numpy as np
 
-from repro.core import CacheConfig, IGTCache
+from repro.core import CacheConfig, open_cache
 from repro.core.types import MB
 from repro.storage import RemoteStore, make_dataset
-
-
-def drain(eng, out, t):
-    for p, s in out.prefetches:
-        eng.complete_prefetch(p, s, t)
 
 
 def main():
@@ -35,7 +35,7 @@ def main():
                            small_file_size=256 * 1024))
     cfg = CacheConfig(min_share=16 * MB, rebalance_quantum=16 * MB,
                       rebalance_period=5.0)
-    eng = IGTCache(store, 256 * MB, cfg=cfg)
+    client = open_cache(store, 256 * MB, cfg=cfg, executor="sim")
 
     t = 0.0
     rng = random.Random(0)
@@ -47,32 +47,35 @@ def main():
     train_order = list(range(len(train)))
 
     si = 0
+    first_bytes = None
     for epoch in range(3):
         rng.shuffle(train_order)
         for j in train_order:
             # one sequential access
             f = scan[si % len(scan)]; si += 1
-            drain(eng, eng.read(f.path, 0, f.size, t), t); t += 0.01
+            client.read(f.path, 0, f.size, t); t += 0.01
             # one random-training access
             f = train[j]
-            drain(eng, eng.read(f.path, 0, f.size, t), t); t += 0.01
-            # one zipf RAG access
+            client.read(f.path, 0, f.size, t); t += 0.01
+            # one zipf RAG access — ask the client for the bytes too
             f = rag[int(rag_perm[(nrng.zipf(1.3) - 1) % len(rag)])]
-            drain(eng, eng.read(f.path, 0, f.size, t), t); t += 0.01
+            res = client.read(f.path, 0, f.size, t, fetch=True); t += 0.01
+            if first_bytes is None:
+                first_bytes = len(res.data)
 
     print("\nDetected streams (pattern → policy chosen by the cache):")
-    for path, cmu in sorted(eng.cache.cmus.items()):
-        if cmu is eng.cache.default_cmu:
-            continue
+    for path, cmu in sorted(client.iter_workload_cmus()):
         tot = cmu.hits + cmu.misses
         pats = {s.pattern.value: type(s.policy).__name__
                 for s in cmu.substreams.values()}
         print(f"  {'/'.join(path):22s} pattern={cmu.effective_pattern().value:10s} "
               f"quota={cmu.quota >> 20:4d}MB hit_ratio={cmu.hits / max(1, tot):.2f} "
               f"policies={pats}")
-    s = eng.snapshot()
+    s = client.snapshot()
     print(f"\nOverall: CHR={s['hit_ratio']:.3f}  prefetch_hits={s['prefetch_hits']}"
           f"  tree_nodes={s['nodes']}")
+    print(f"Executor: {s['executor']}  (first fetched passage: "
+          f"{first_bytes} bytes)")
     print("Sequential stream should show eager+prefetch, random → uniform "
           "pinning, zipf → LRU.")
 

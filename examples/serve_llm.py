@@ -1,6 +1,10 @@
 """Serve a small LM with batched requests; RAG retrievals flow through the
 unified cache (a skewed stream → the cache converges to LRU for it).
 
+The retrieval cache is a ``CacheClient`` (``open_cache``): serving runs on
+the wall clock, so prefetch candidates execute on the background
+``ThreadedExecutor`` instead of inside the request path.
+
     PYTHONPATH=src python examples/serve_llm.py --requests 12
 """
 import argparse
@@ -14,7 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import CacheConfig, IGTCache
+from repro.core import CacheConfig, open_cache
 from repro.core.types import MB
 from repro.models.transformer import init_params
 from repro.serve.engine import Request, ServingEngine
@@ -35,9 +39,10 @@ def main():
     store = RemoteStore()
     store.add(make_dataset("knowledge", "flat_files", n_files=500,
                            small_file_size=64 * 1024))
-    cache = IGTCache(store, 16 * MB,
-                     cfg=CacheConfig(min_share=2 * MB,
-                                     rebalance_quantum=2 * MB))
+    cache = open_cache(store, 16 * MB,
+                       cfg=CacheConfig(min_share=2 * MB,
+                                       rebalance_quantum=2 * MB),
+                       executor="threaded")
     srv = ServingEngine(params, cfg, batch=args.batch, max_seq=128,
                         cache_engine=cache, knowledge_dataset="knowledge",
                         retrieval_k=4)
@@ -55,10 +60,14 @@ def main():
     for r in done[:4]:
         print(f"  req{r.rid}: retrieved {r.retrieved} passages → "
               f"tokens {r.output}")
+    cache.flush(timeout=5.0)
     s = cache.snapshot()
+    pattern = next((c.effective_pattern().value
+                    for _p, c in cache.iter_workload_cmus()), "?")
     print(f"retrieval cache: CHR={s['hit_ratio']:.3f} over "
-          f"{s['hits']+s['misses']} passage reads "
-          f"(pattern: {next((c.effective_pattern().value for p, c in cache.cache.cmus.items() if p != ('<default>',)), '?')})")
+          f"{s['hits']+s['misses']} passage reads (pattern: {pattern}; "
+          f"executor: {s['executor']})")
+    cache.close()
 
 
 if __name__ == "__main__":

@@ -3,11 +3,20 @@
 A unified, pattern/granularity-adaptive cache for heterogeneous AI workloads:
 AccessStreamTree (§3.1) + K-S hypothesis-test pattern recognition (§3.2) +
 adaptive prefetch/eviction/allocation (§3.3).
+
+Public API is two layers (docs/API.md): the *kernel* (``IGTCache`` /
+``ShardedIGTCache`` — a deterministic state machine driven with explicit
+timestamps) and the *client* (``CacheClient`` via ``open_cache`` — owns
+byte movement through a ``BackingStore`` and prefetch execution through a
+``PrefetchExecutor``).
 """
 from .access_stream_tree import (AccessStream, AccessStreamTree,
                                  ObservedChain, analyze_streams)
-from .baselines import BUNDLES, bundle, bundle_engine
+from .baselines import BUNDLES, bundle, bundle_client, bundle_engine
 from .cache import CacheManageUnit, UnifiedCache, block_key
+from .client import (BackingStore, CacheClient, ExecutorStats, KernelGuard,
+                     NullExecutor, PrefetchExecutor, ReadResult, SimExecutor,
+                     ThreadedExecutor, open_cache)
 from .igtcache import EngineOptions, IGTCache, ReadOutcome, informative_depth
 from .ks import ks_critical, ks_test_random, triangular_cdf
 from .meta import LevelCache
@@ -20,12 +29,16 @@ from .types import AccessRecord, CacheConfig, CacheStats, GB, MB, PathT, Pattern
 
 __all__ = [
     "AccessRecord", "AccessStream", "AccessStreamTree", "BUNDLES",
-    "CacheConfig", "CacheManageUnit", "CacheStats", "EngineOptions", "GB",
-    "GlobalRebalancer", "IGTCache", "LevelCache", "MB", "ObservedChain",
-    "PathT", "Pattern", "PatternResult", "ReadOutcome", "ShardedIGTCache",
+    "BackingStore", "CacheClient", "CacheConfig", "CacheManageUnit",
+    "CacheStats", "EngineOptions", "ExecutorStats", "GB",
+    "GlobalRebalancer", "IGTCache", "KernelGuard", "LevelCache", "MB",
+    "NullExecutor", "ObservedChain",
+    "PathT", "Pattern", "PatternResult", "PrefetchExecutor", "ReadOutcome",
+    "ReadResult", "ShardedIGTCache", "SimExecutor", "ThreadedExecutor",
     "UnifiedCache", "analyze_streams", "block_key", "bundle",
-    "bundle_engine", "classify",
+    "bundle_client", "bundle_engine", "classify",
     "classify_batch", "detect_sequential", "fit_adaptive_ttl",
     "fit_adaptive_ttl_batch", "informative_depth", "ks_critical",
-    "ks_test_random", "make_engine", "shard_index", "triangular_cdf",
+    "ks_test_random", "make_engine", "open_cache", "shard_index",
+    "triangular_cdf",
 ]

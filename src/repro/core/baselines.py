@@ -64,7 +64,7 @@ def bundle(name: str) -> EngineOptions:
 
 def bundle_engine(name: str, meta, capacity: int,
                   cfg: Optional[CacheConfig] = None, n_shards: int = 1):
-    """Construct an engine running the named bundle, sharded when asked.
+    """Construct a bare kernel running the named bundle, sharded when asked.
 
     Baselines ride the same sharded facade as IGTCache proper — the
     comparison in the evaluation stays apples-to-apples at any shard count
@@ -74,3 +74,13 @@ def bundle_engine(name: str, meta, capacity: int,
     from .sharded import make_engine
     return make_engine(meta, capacity, cfg=cfg, options=bundle(name),
                        n_shards=n_shards)
+
+
+def bundle_client(name: str, store, capacity: int,
+                  cfg: Optional[CacheConfig] = None, n_shards: int = 1,
+                  **client_kw):
+    """``open_cache`` with a named policy bundle: the one constructor path
+    (sim, benchmarks, examples) for baseline CacheClients."""
+    from .client import open_cache
+    return open_cache(store, capacity, cfg=cfg, options=bundle(name),
+                      n_shards=n_shards, **client_kw)

@@ -1,0 +1,758 @@
+"""The unified two-layer cache API: kernel engine + ``CacheClient``.
+
+The paper's engine is a pure observe→recognize→adapt state machine; the
+I/O contract around it — who fetches missed bytes, who runs prefetch
+candidates, who calls ``complete_prefetch`` when background bytes land —
+was re-implemented by every consumer (the cluster simulator's event loop,
+the token pipeline's ad-hoc worker thread, raw loops in the examples).
+This module absorbs that contract behind one client interface (IGTCache
+§2's "no code intrusion" claim; Hoard arXiv:1812.00669 draws the same
+line between cache kernel and client library).
+
+Two layers:
+
+**Kernel layer** — the engine itself (``IGTCache`` / ``ShardedIGTCache``),
+a deterministic single-threaded state machine with the documented surface
+
+    read / read_batch / complete_prefetch / cancel_prefetch / tick /
+    pin / never_cache / stats / hit_ratio / snapshot / iter_workload_cmus
+
+The kernel never does I/O and never owns time: every call takes ``now``.
+This is the property-test surface (tests/test_equivalence.py) and stays
+available for callers that need full control (the discrete-event
+simulator owns bandwidth, so it drives the kernel through the client with
+a link-backed executor; see ``sim.cluster.LinkExecutor``).
+
+**Client layer** — ``CacheClient`` wraps a kernel with
+
+  * a pluggable :class:`BackingStore` (``storage.RemoteStore`` satisfies
+    it) that supplies actual bytes, and
+  * a :class:`PrefetchExecutor` that runs the kernel's prefetch
+    candidates: the deterministic inline :class:`SimExecutor` (virtual
+    clock; bitwise-equivalent to the caller-driven loop) or the
+    :class:`ThreadedExecutor` (one worker per kernel shard — shards share
+    no read-path state — bounded queues, demand-miss > prefetch priority,
+    in-queue dedup, and cancellation that calls ``cancel_prefetch`` on
+    overflow/shutdown instead of silently dropping candidates).
+
+``open_cache(store, capacity, ...) -> CacheClient`` is the one
+constructor path all consumers share; every future scaling lever
+(multi-process shards, real object stores) plugs in behind these two
+protocols.  See docs/API.md for the full contract.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
+                    Tuple, Union)
+
+import numpy as np
+
+from .cache import block_key
+from .igtcache import EngineOptions, ReadOutcome
+from .sharded import Engine, ShardedIGTCache, make_engine
+from .types import CacheConfig, PathT
+
+__all__ = [
+    "BackingStore", "CacheClient", "ExecutorStats", "KernelGuard",
+    "NullExecutor", "PrefetchExecutor", "ReadResult", "SimExecutor",
+    "ThreadedExecutor", "open_cache",
+]
+
+
+class BackingStore:
+    """Protocol for the byte source behind the cache (duck-typed; the
+    simulated ``storage.RemoteStore`` satisfies it as-is).
+
+    ``fetch_block(block_path, size) -> np.ndarray[uint8]`` returns the
+    first ``size`` bytes of the 4 MB block at ``block_path`` (a file path
+    tuple ending in ``"#<n>"``).  Adapters over real object stores (S3,
+    GCS) implement exactly this one method.
+    """
+
+    def fetch_block(self, block_path: PathT,
+                    size: int) -> np.ndarray:  # pragma: no cover - protocol
+        raise NotImplementedError
+
+
+@dataclass
+class ExecutorStats:
+    """Candidate accounting for one executor (lost-candidate audit trail:
+    ``submitted == completed + cancelled + deduped + in_flight``)."""
+
+    submitted: int = 0        # candidates handed to submit()
+    completed: int = 0        # complete_prefetch delivered to the kernel
+    cancelled: int = 0        # cancel_prefetch on overflow / shutdown
+    deduped: int = 0          # dropped: same block already queued/in flight
+    demand_fetches: int = 0   # priority demand-miss fetches served
+
+    def snapshot(self) -> dict:
+        return {"submitted": self.submitted, "completed": self.completed,
+                "cancelled": self.cancelled, "deduped": self.deduped,
+                "demand_fetches": self.demand_fetches}
+
+
+class KernelGuard:
+    """Per-shard mutual exclusion for the kernel.
+
+    The kernel is a single-threaded state machine; a ``ShardedIGTCache``
+    is N independent ones (shards share no read-path state, so per-shard
+    locks give shard-parallel readers/completers).  Cross-shard
+    operations (``tick`` with the global rebalancer, ``pin``) take all
+    locks in index order.  For a plain ``IGTCache`` there is one lock.
+    """
+
+    def __init__(self, engine: Engine) -> None:
+        self.engine = engine
+        n = engine.n_shards if isinstance(engine, ShardedIGTCache) else 1
+        self._locks = [threading.Lock() for _ in range(n)]
+        self._sharded = isinstance(engine, ShardedIGTCache)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._locks)
+
+    def shard_id(self, path: PathT) -> int:
+        if not self._sharded:
+            return 0
+        return self.engine.shard_id(path)
+
+    def lock_for(self, path: PathT) -> threading.Lock:
+        return self._locks[self.shard_id(path)]
+
+    def lock_shard(self, sid: int) -> threading.Lock:
+        return self._locks[sid]
+
+    def acquire_all(self) -> None:
+        for lk in self._locks:          # fixed order: no deadlock
+            lk.acquire()
+
+    def release_all(self) -> None:
+        for lk in reversed(self._locks):
+            lk.release()
+
+
+class PrefetchExecutor:
+    """Protocol + shared plumbing for prefetch candidate execution.
+
+    Lifecycle: constructed unattached (configuration only), then
+    ``attach``-ed exactly once by the :class:`CacheClient` that owns it.
+    ``submit`` receives the candidates of one read at timestamp ``now``;
+    the executor must eventually either ``complete_prefetch`` or
+    ``cancel_prefetch`` every candidate on the kernel — never drop one
+    silently (the kernel tracks pending candidates for dedup, so a
+    dropped candidate blocks that block's re-issue forever).
+    """
+
+    def __init__(self) -> None:
+        self.stats = ExecutorStats()
+        self.engine: Optional[Engine] = None
+        self.backing: Optional[BackingStore] = None
+        self.guard: Optional[KernelGuard] = None
+        self.clock: Callable[[], float] = time.monotonic
+
+    def attach(self, engine: Engine, backing: Optional[BackingStore],
+               guard: KernelGuard, clock: Callable[[], float]) -> None:
+        if self.engine is not None and self.engine is not engine:
+            raise RuntimeError("executor is already attached to a kernel")
+        self.engine = engine
+        self.backing = backing
+        self.guard = guard
+        self.clock = clock
+
+    # -- candidate path -----------------------------------------------------
+    def submit(self, candidates: Sequence[Tuple[PathT, int]],
+               now: float) -> None:  # pragma: no cover - protocol
+        raise NotImplementedError
+
+    # -- demand path (priority over prefetch) -------------------------------
+    def fetch_demand(self, requests: Sequence[Tuple[PathT, int]]
+                     ) -> List[np.ndarray]:
+        """Fetch demand-missed blocks; must preempt queued prefetches."""
+        self.stats.demand_fetches += len(requests)
+        assert self.backing is not None, "demand fetch needs a BackingStore"
+        return [self.backing.fetch_block(p, s) for p, s in requests]
+
+    # -- lifecycle ----------------------------------------------------------
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted candidate completed or cancelled."""
+        return True
+
+    def close(self, cancel_pending: bool = True) -> None:
+        pass
+
+
+class SimExecutor(PrefetchExecutor):
+    """Deterministic inline executor for virtual-clock callers.
+
+    ``submit`` completes every candidate synchronously at the read's own
+    ``now`` — exactly the caller-driven loop the discrete-event tests and
+    the non-threaded pipeline ran by hand, so a client with a SimExecutor
+    is bitwise-equivalent to that loop (pinned in
+    tests/test_equivalence.py).  ``max_fetch_bytes=0`` (default) moves no
+    bytes: pure-simulation callers only track sizes and latencies.
+    """
+
+    def __init__(self, max_fetch_bytes: int = 0) -> None:
+        super().__init__()
+        self.max_fetch_bytes = max_fetch_bytes
+
+    def submit(self, candidates: Sequence[Tuple[PathT, int]],
+               now: float) -> None:
+        if not candidates:
+            return
+        self.stats.submitted += len(candidates)
+        eng = self.engine
+        for path, size in candidates:
+            if self.backing is not None and self.max_fetch_bytes > 0:
+                self.backing.fetch_block(path, min(size,
+                                                   self.max_fetch_bytes))
+            eng.complete_prefetch(path, size, now)
+            self.stats.completed += 1
+
+
+class NullExecutor(PrefetchExecutor):
+    """Read-only client: every candidate is cancelled immediately (the
+    kernel's pending-table stays clean; nothing is fetched)."""
+
+    def submit(self, candidates: Sequence[Tuple[PathT, int]],
+               now: float) -> None:
+        if not candidates:
+            return
+        self.stats.submitted += len(candidates)
+        for path, _size in candidates:
+            self.engine.cancel_prefetch(path)
+            self.stats.cancelled += 1
+
+
+class _DemandItem:
+    __slots__ = ("path", "size", "data", "error", "event")
+
+    def __init__(self, path: PathT, size: int) -> None:
+        self.path = path
+        self.size = size
+        self.data: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+        self.event = threading.Event()
+
+
+class _ShardQueue:
+    """Two-class bounded queue for one shard worker.
+
+    Demand items (missed bytes a reader is blocked on) always pop before
+    background prefetch candidates and are never rejected; the background
+    class is bounded by ``depth`` and rejects on overflow (the caller
+    cancels the candidate on the kernel).  ``keys`` is the in-queue /
+    in-flight dedup set for background candidates.
+    """
+
+    def __init__(self, depth: int) -> None:
+        self.depth = depth
+        self.cv = threading.Condition()
+        self.demand: Deque[_DemandItem] = deque()
+        self.background: Deque[Tuple[PathT, int, str]] = deque()
+        self.keys: Set[str] = set()          # queued + in-flight candidates
+        self.outstanding = 0                 # background items not yet done
+        self.closed = False
+
+    def put_demand(self, item: _DemandItem) -> bool:
+        with self.cv:
+            if self.closed:
+                return False
+            self.demand.append(item)
+            self.cv.notify()
+            return True
+
+    def offer_background(self, path: PathT, size: int,
+                         key: str) -> str:
+        """Returns 'queued' | 'dup' | 'full' | 'closed'."""
+        with self.cv:
+            if self.closed:
+                return "closed"
+            if key in self.keys:
+                return "dup"
+            if len(self.background) >= self.depth:
+                return "full"
+            self.keys.add(key)
+            self.background.append((path, size, key))
+            self.outstanding += 1
+            self.cv.notify()
+            return "queued"
+
+    def get(self, timeout: float):
+        with self.cv:
+            if not self.demand and not self.background:
+                self.cv.wait(timeout)
+            if self.demand:
+                return self.demand.popleft()
+            if self.background:
+                return self.background.popleft()
+            return None
+
+    def task_done(self, key: str) -> None:
+        with self.cv:
+            self.keys.discard(key)
+            self.outstanding -= 1
+            self.cv.notify_all()
+
+    def drain_background(self) -> List[Tuple[PathT, int, str]]:
+        with self.cv:
+            items = list(self.background)
+            self.background.clear()
+            for _, _, key in items:
+                self.keys.discard(key)
+                self.outstanding -= 1
+            self.cv.notify_all()
+            return items
+
+    def wait_idle(self, timeout: Optional[float]) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self.cv:
+            while self.outstanding > 0 or self.demand:
+                rem = None if deadline is None else deadline - time.monotonic()
+                if rem is not None and rem <= 0:
+                    return False
+                self.cv.wait(rem if rem is not None else 0.1)
+        return True
+
+
+class ThreadedExecutor(PrefetchExecutor):
+    """Per-shard background prefetch workers.
+
+    One daemon worker per kernel shard (``IGTCache`` counts as one
+    shard); a candidate is routed to its block's shard worker, so
+    completions only ever contend with reads of the same shard — the
+    multi-worker shard driver from the ROADMAP.  Per-shard queues are
+    bounded; an overflowing candidate is *cancelled on the kernel*
+    (``cancel_prefetch``) so the pending-table never leaks, and shutdown
+    cancels everything still queued.  Demand-miss fetches jump every
+    queue (strict priority) and are never rejected.
+    """
+
+    def __init__(self, queue_depth: int = 4096,
+                 max_fetch_bytes: int = 4096,
+                 poll_s: float = 0.05) -> None:
+        super().__init__()
+        self.queue_depth = queue_depth
+        self.max_fetch_bytes = max_fetch_bytes
+        self.poll_s = poll_s
+        self._queues: List[_ShardQueue] = []
+        self._workers: List[threading.Thread] = []
+        self._stats_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._started = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def attach(self, engine: Engine, backing: Optional[BackingStore],
+               guard: KernelGuard, clock: Callable[[], float]) -> None:
+        super().attach(engine, backing, guard, clock)
+        if self._started:
+            return
+        self._started = True
+        for sid in range(guard.n_shards):
+            q = _ShardQueue(self.queue_depth)
+            w = threading.Thread(target=self._run, args=(sid, q),
+                                 name=f"igt-prefetch-{sid}", daemon=True)
+            self._queues.append(q)
+            self._workers.append(w)
+            w.start()
+
+    def close(self, cancel_pending: bool = True) -> None:
+        if not self._started or self._stop.is_set():
+            return
+        if not cancel_pending:
+            self.flush()
+        for q in self._queues:          # late offers now reject as 'closed'
+            with q.cv:
+                q.closed = True
+        self._cancel_queued()
+        self._stop.set()
+        for w in self._workers:
+            w.join(timeout=2.0)
+        # workers are down: anything that slipped between drain and join is
+        # cancelled too — a candidate must never be dropped silently —
+        # and stranded demand waiters are released with an error
+        self._cancel_queued()
+        for q in self._queues:
+            with q.cv:
+                while q.demand:
+                    item = q.demand.popleft()
+                    item.error = RuntimeError(
+                        "ThreadedExecutor closed with the fetch in queue")
+                    item.event.set()
+
+    def _cancel_queued(self) -> None:
+        for sid, q in enumerate(self._queues):
+            for path, _size, _key in q.drain_background():
+                with self.guard.lock_shard(sid):
+                    self.engine.cancel_prefetch(path)
+                with self._stats_lock:
+                    self.stats.cancelled += 1
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        return all(q.wait_idle(timeout) for q in self._queues)
+
+    # -- candidate path -----------------------------------------------------
+    def submit(self, candidates: Sequence[Tuple[PathT, int]],
+               now: float) -> None:
+        if not candidates:
+            return
+        guard = self.guard
+        with self._stats_lock:
+            self.stats.submitted += len(candidates)
+        for path, size in candidates:
+            sid = guard.shard_id(path)
+            got = self._queues[sid].offer_background(path, size,
+                                                     block_key(path))
+            if got == "queued":
+                continue
+            if got == "dup":
+                # same block already queued/in flight: this duplicate
+                # candidate will never get its own completion — release it
+                with guard.lock_shard(sid):
+                    self.engine.cancel_prefetch(path)
+                with self._stats_lock:
+                    self.stats.deduped += 1
+            else:  # full / closed → cancel instead of silently dropping
+                with guard.lock_shard(sid):
+                    self.engine.cancel_prefetch(path)
+                with self._stats_lock:
+                    self.stats.cancelled += 1
+
+    # -- demand path --------------------------------------------------------
+    def fetch_demand(self, requests: Sequence[Tuple[PathT, int]]
+                     ) -> List[np.ndarray]:
+        """Route each demand miss to its shard worker (priority class) and
+        block until all land — misses of one batch fetch shard-parallel."""
+        assert self.backing is not None, "demand fetch needs a BackingStore"
+        with self._stats_lock:
+            self.stats.demand_fetches += len(requests)
+        items = []
+        for path, size in requests:
+            item = _DemandItem(path, size)
+            items.append(item)
+            if not self._queues[self.guard.shard_id(path)].put_demand(item):
+                item.error = RuntimeError(
+                    "demand fetch on a closed ThreadedExecutor")
+                item.event.set()
+        for item in items:
+            item.event.wait()
+        for item in items:
+            if item.error is not None:  # re-raise in the reader's thread
+                raise item.error
+        return [item.data for item in items]
+
+    # -- worker loop --------------------------------------------------------
+    def _run(self, sid: int, q: _ShardQueue) -> None:
+        guard = self.guard
+        while not self._stop.is_set():
+            got = q.get(self.poll_s)
+            if got is None:
+                continue
+            if isinstance(got, _DemandItem):
+                # a failing backing store (real S3/GCS adapters will fail)
+                # must not kill the shard worker or strand the blocked
+                # reader: hand the error back through the item
+                try:
+                    got.data = self.backing.fetch_block(got.path, got.size)
+                except BaseException as e:
+                    got.error = e
+                finally:
+                    got.event.set()
+                    with q.cv:
+                        q.cv.notify_all()
+                continue
+            path, size, key = got
+            try:
+                try:
+                    if self.backing is not None and self.max_fetch_bytes > 0:
+                        # the actual byte movement (capped: content is what
+                        # a real store would stream; the kernel only needs
+                        # sizes)
+                        self.backing.fetch_block(
+                            path, min(size, self.max_fetch_bytes))
+                    with guard.lock_shard(sid):
+                        self.engine.complete_prefetch(path, size,
+                                                      self.clock())
+                    with self._stats_lock:
+                        self.stats.completed += 1
+                except Exception:
+                    # failed fetch → the candidate will never complete:
+                    # release it on the kernel, keep the worker alive
+                    with guard.lock_shard(sid):
+                        self.engine.cancel_prefetch(path)
+                    with self._stats_lock:
+                        self.stats.cancelled += 1
+            finally:
+                q.task_done(key)
+
+
+class ReadResult:
+    """One client read: the kernel's per-block outcome plus, when the
+    client fetched through its BackingStore, the requested bytes."""
+
+    __slots__ = ("outcome", "data")
+
+    def __init__(self, outcome: ReadOutcome,
+                 data: Optional[np.ndarray] = None) -> None:
+        self.outcome = outcome
+        self.data = data
+
+    @property
+    def blocks(self):
+        return self.outcome.blocks
+
+    @property
+    def cached_bytes(self) -> int:
+        return self.outcome.cached_bytes
+
+    @property
+    def remote_bytes(self) -> int:
+        return self.outcome.remote_bytes
+
+
+class CacheClient:
+    """The caller layer: reads + prefetch execution over one kernel.
+
+    ``read``/``read_batch`` serve through the kernel under the shard
+    guard, hand the kernel's prefetch candidates to the executor, and —
+    when asked for bytes — fetch hits inline and misses through the
+    executor's priority demand path.  All kernel introspection
+    (``stats``, ``snapshot``, ``iter_workload_cmus``) passes through.
+
+    Time: pass ``now`` explicitly (virtual-clock callers) or omit it to
+    use the client's ``clock`` (default ``time.monotonic``).
+    """
+
+    def __init__(self, engine: Engine, *,
+                 backing: Optional[BackingStore] = None,
+                 executor: Optional[PrefetchExecutor] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 fetch_bytes: bool = False) -> None:
+        self.engine = engine
+        self.backing = backing
+        self.clock = clock or time.monotonic
+        self.guard = KernelGuard(engine)
+        self.executor = executor if executor is not None else SimExecutor()
+        self.executor.attach(engine, backing, self.guard, self.clock)
+        self.fetch_bytes = fetch_bytes
+        if fetch_bytes and backing is None:
+            raise ValueError("fetch_bytes=True needs a BackingStore")
+        self._closed = False
+
+    # ------------------------------------------------------------------ read
+    def read(self, file_path: PathT, offset: int, size: int,
+             now: Optional[float] = None, *,
+             fetch: Optional[bool] = None) -> ReadResult:
+        """Serve one extent: kernel read → executor-dispatched prefetch →
+        (optionally) bytes for the requested range."""
+        if now is None:
+            now = self.clock()
+        with self.guard.lock_for(file_path):
+            out = self.engine.read(file_path, offset, size, now)
+        if out.prefetches:
+            self.executor.submit(out.prefetches, now)
+        return self._finish(file_path, offset, size, out, fetch)
+
+    def read_batch(self, requests: Sequence[Tuple[PathT, int, int]],
+                   now: Optional[float] = None, *,
+                   fetch: Optional[bool] = None) -> List[ReadResult]:
+        """One kernel ``read_batch`` (tick amortized per batch), prefetch
+        dispatch per outcome, demand bytes fetched shard-parallel."""
+        if now is None:
+            now = self.clock()
+        self.guard.acquire_all()
+        try:
+            outs = self.engine.read_batch(requests, now)
+        finally:
+            self.guard.release_all()
+        for out in outs:
+            if out.prefetches:
+                self.executor.submit(out.prefetches, now)
+        return [self._finish(fp, off, sz, out, fetch)
+                for (fp, off, sz), out in zip(requests, outs)]
+
+    def _finish(self, file_path: PathT, offset: int, size: int,
+                out: ReadOutcome, fetch: Optional[bool]) -> ReadResult:
+        want = self.fetch_bytes if fetch is None else fetch
+        if not want or not out.blocks:
+            return ReadResult(out)
+        if self.backing is None:
+            raise ValueError("byte fetch requested without a BackingStore")
+        return ReadResult(out, self._fetch_range(file_path, offset, size,
+                                                 out))
+
+    def _fetch_range(self, file_path: PathT, offset: int, size: int,
+                     out: ReadOutcome) -> np.ndarray:
+        """Assemble the requested byte range: cache hits read locally
+        (synthesized by the backing store — the repo carries no block
+        payload store), demand misses go through the executor's priority
+        demand path (shard-parallel under the ThreadedExecutor)."""
+        bs = self.engine.cfg.block_size
+        first = offset // bs
+        # out.blocks carry populated block sizes (file tail may be short);
+        # clamp the requested range to what the kernel actually served
+        last_b = first + len(out.blocks) - 1
+        end = min(offset + size, last_b * bs + out.blocks[-1].size)
+        pieces: List[Tuple[int, int, int]] = []   # (block, start, stop)
+        demand: List[Tuple[PathT, int]] = []
+        for i, blk in enumerate(out.blocks):
+            b = first + i
+            start = max(offset, b * bs) - b * bs
+            stop = min(end, b * bs + blk.size) - b * bs
+            pieces.append((b, start, stop))
+            if not blk.hit:
+                demand.append((file_path + (f"#{b}",), stop))
+        fetched: Dict[PathT, np.ndarray] = {}
+        if demand:
+            for (bp, _sz), data in zip(demand,
+                                       self.executor.fetch_demand(demand)):
+                fetched[bp] = data
+        chunks: List[np.ndarray] = []
+        for b, start, stop in pieces:
+            bp = file_path + (f"#{b}",)
+            data = fetched.get(bp)
+            if data is None:
+                data = self.backing.fetch_block(bp, stop)
+            chunks.append(np.asarray(data[start:stop], dtype=np.uint8))
+        return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+
+    # ------------------------------------------------------ kernel passthrough
+    def complete_prefetch(self, path: PathT, size: int,
+                          now: Optional[float] = None) -> bool:
+        if now is None:
+            now = self.clock()
+        with self.guard.lock_for(path):
+            return self.engine.complete_prefetch(path, size, now)
+
+    def cancel_prefetch(self, path: PathT) -> None:
+        with self.guard.lock_for(path):
+            self.engine.cancel_prefetch(path)
+
+    def tick(self, now: Optional[float] = None) -> None:
+        if now is None:
+            now = self.clock()
+        self.guard.acquire_all()
+        try:
+            self.engine.tick(now)
+        finally:
+            self.guard.release_all()
+
+    def pin(self, path: PathT) -> None:
+        self.guard.acquire_all()
+        try:
+            self.engine.pin(path)
+        finally:
+            self.guard.release_all()
+
+    def never_cache(self, path: PathT) -> None:
+        self.guard.acquire_all()
+        try:
+            self.engine.never_cache(path)
+        finally:
+            self.guard.release_all()
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def meta(self):
+        return self.engine.meta
+
+    @property
+    def cfg(self) -> CacheConfig:
+        return self.engine.cfg
+
+    @property
+    def stats(self):
+        return self.engine.stats
+
+    def hit_ratio(self) -> float:
+        return self.engine.hit_ratio()
+
+    def snapshot(self) -> dict:
+        s = self.engine.snapshot()
+        s["executor"] = self.executor.stats.snapshot()
+        return s
+
+    def iter_workload_cmus(self):
+        return self.engine.iter_workload_cmus()
+
+    # ------------------------------------------------------------- lifecycle
+    def set_executor(self, executor: PrefetchExecutor) -> None:
+        """Swap the prefetch transport: the old executor is closed (its
+        queued candidates cancelled on the kernel) and the new one is
+        attached.  The cluster simulator uses this to re-route a client's
+        prefetches onto its simulated link."""
+        self.executor.close(cancel_pending=True)
+        executor.attach(self.engine, self.backing, self.guard, self.clock)
+        self.executor = executor
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every in-flight prefetch completed (ThreadedExecutor;
+        inline executors are always drained)."""
+        return self.executor.flush(timeout)
+
+    def close(self, cancel_pending: bool = True) -> None:
+        """Shut the executor down (cancelling queued candidates on the
+        kernel).  The kernel itself carries no OS resources to release."""
+        if self._closed:
+            return
+        self._closed = True
+        self.executor.close(cancel_pending=cancel_pending)
+
+    def __enter__(self) -> "CacheClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+_EXECUTORS = {
+    "sim": SimExecutor,
+    "threaded": ThreadedExecutor,
+    "none": NullExecutor,
+}
+
+
+def open_cache(store, capacity: int, *,
+               cfg: Optional[CacheConfig] = None,
+               options: Optional[EngineOptions] = None,
+               n_shards: int = 1,
+               executor: Union[str, PrefetchExecutor] = "sim",
+               backing: Optional[BackingStore] = None,
+               clock: Optional[Callable[[], float]] = None,
+               fetch_bytes: bool = False,
+               queue_depth: int = 4096,
+               max_fetch_bytes: int = 4096) -> CacheClient:
+    """The one constructor path: metadata store + capacity → CacheClient.
+
+    ``store`` doubles as the kernel's ``StoreMeta`` and (unless
+    ``backing`` overrides it) the client's ``BackingStore`` — the
+    simulated ``RemoteStore`` satisfies both protocols.  ``executor``
+    picks the prefetch transport: ``"sim"`` (deterministic inline,
+    virtual-clock callers), ``"threaded"`` (per-shard background workers,
+    wall-clock callers), ``"none"`` (read-only: candidates cancelled), or
+    a pre-built :class:`PrefetchExecutor` instance.
+    """
+    engine = make_engine(store, capacity, cfg=cfg, options=options,
+                         n_shards=n_shards)
+    if backing is None and hasattr(store, "fetch_block"):
+        backing = store
+    if isinstance(executor, str):
+        try:
+            kind = _EXECUTORS[executor]
+        except KeyError:
+            raise ValueError(
+                f"unknown executor {executor!r}; expected one of "
+                f"{sorted(_EXECUTORS)} or a PrefetchExecutor instance")
+        if kind is ThreadedExecutor:
+            executor = ThreadedExecutor(queue_depth=queue_depth,
+                                        max_fetch_bytes=max_fetch_bytes)
+        elif kind is SimExecutor:
+            executor = SimExecutor()
+        else:
+            executor = NullExecutor()
+    return CacheClient(engine, backing=backing, executor=executor,
+                       clock=clock, fetch_bytes=fetch_bytes)

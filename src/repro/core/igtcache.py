@@ -1,15 +1,21 @@
 """The IGTCache engine (§3, §4): observe → recognize → adapt.
 
-One object drives the full read path:
+This is the **kernel layer** of the two-layer public API (docs/API.md):
+one object drives the full read path:
 
     outcome = engine.read(file_path, offset, size, now)
 
 ``outcome`` reports, per 4 MB block, whether it was served from cache, and
 carries the prefetch candidates the engine wants fetched in the background.
-The *caller* (discrete-event simulator, or the training-input pipeline) owns
-time and bandwidth: it fetches misses/prefetches and calls
-``complete_prefetch`` when background bytes land.  This keeps the engine a
-pure, deterministic state machine — the property-test surface.
+The *caller* owns time and bandwidth: it fetches misses/prefetches and
+calls ``complete_prefetch`` when background bytes land (or
+``cancel_prefetch`` for candidates it will never run — every candidate
+must get one or the other).  This keeps the engine a pure, deterministic
+state machine — the property-test surface.  Most consumers don't drive
+the kernel by hand: the *client layer* (``core.client.CacheClient`` via
+``open_cache``) owns the I/O contract and runs candidates on a pluggable
+``PrefetchExecutor``; the discrete-event simulator plugs its shared-link
+transport in as one of those executors.
 
 Hot-path architecture (§4 overhead claim, Fig. 17):
 

@@ -22,7 +22,7 @@ import jax
 import numpy as np
 
 from ..configs import get_config, reduced_config
-from ..core import CacheConfig, IGTCache, bundle
+from ..core import CacheConfig, bundle_client
 from ..core.types import MB
 from ..data.pipeline import CachedTokenPipeline, make_token_dataset
 from ..models.config import ShapeSpec
@@ -69,11 +69,15 @@ def main(argv=None) -> int:
     store.add(make_token_dataset("train_corpus", n_shards, shard_bytes))
     cache_cfg = CacheConfig(min_share=16 * MB, rebalance_quantum=16 * MB,
                             rebalance_period=10.0)
-    engine = IGTCache(store, args.cache_mb * MB, cfg=cache_cfg,
-                      options=bundle(args.cache_bundle))
-    pipe = CachedTokenPipeline(store, engine, "train_corpus",
+    # one constructor path: the client owns prefetch execution (per-shard
+    # background workers) and byte movement; the trainer never loops over
+    # candidates by hand
+    client = bundle_client(args.cache_bundle, store, args.cache_mb * MB,
+                           cfg=cache_cfg, executor="threaded")
+    engine = client.engine
+    pipe = CachedTokenPipeline(store, client, "train_corpus",
                                seq_len=args.seq, batch=args.batch,
-                               vocab=cfg.vocab, background_prefetch=True)
+                               vocab=cfg.vocab)
 
     # ---- model / optimizer ------------------------------------------------
     rng = jax.random.PRNGKey(0)
@@ -122,6 +126,7 @@ def main(argv=None) -> int:
     ckpt.wait()
     ckpt.save(args.steps, (params, opt_state), {"step": args.steps})
     pipe.close()
+    client.close()
     s = engine.snapshot()
     dt = time.time() - t_start
     print(f"[train] done: {args.steps - start_step} steps in {dt:.1f}s; "

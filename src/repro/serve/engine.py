@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import IGTCache
+from ..core import CacheClient, IGTCache, NullExecutor
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, forward, init_decode_state
 
@@ -36,7 +36,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch: int = 4,
-                 max_seq: int = 512, cache_engine: Optional[IGTCache] = None,
+                 max_seq: int = 512,
+                 cache_engine: Optional["IGTCache | CacheClient"] = None,
                  knowledge_dataset: Optional[str] = None,
                  retrieval_k: int = 4, zipf_a: float = 1.3,
                  seed: int = 0) -> None:
@@ -44,6 +45,13 @@ class ServingEngine:
         self.cfg = cfg
         self.batch = batch
         self.max_seq = max_seq
+        if cache_engine is not None and not isinstance(cache_engine,
+                                                       CacheClient):
+            # bare kernel: wrap it so its prefetch candidates are cancelled
+            # rather than silently dropped (the kernel's pending table
+            # would otherwise suppress re-issuing those blocks forever)
+            cache_engine = CacheClient(cache_engine,
+                                       executor=NullExecutor())
         self.cache = cache_engine
         self.knowledge = knowledge_dataset
         self.retrieval_k = retrieval_k
@@ -62,7 +70,8 @@ class ServingEngine:
         self.queue.append(req)
 
     def _retrieve(self, req: Request) -> None:
-        """RAG retrieval: zipf-hot passage reads through the unified cache."""
+        """RAG retrieval: zipf-hot passage reads through the unified cache
+        client (prefetch candidates run on its executor)."""
         if self.cache is None or self.knowledge is None:
             return
         ds = self.cache.meta.datasets[self.knowledge]

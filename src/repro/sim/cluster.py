@@ -10,22 +10,64 @@ Semantics:
   * a demand read that finds its block already in flight (as someone else's
     miss or a background prefetch) waits for that transfer instead of
     re-fetching (single-flight).
+
+The simulator is a ``CacheClient`` consumer: it drives the kernel through
+the client layer with a :class:`LinkExecutor` — the executor that models
+prefetch transport as background-priority transfers on the shared link
+(the sim owns time and bandwidth, so candidates cannot complete inline;
+they complete when the event loop lands their transfer and calls
+``client.complete_prefetch``).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
-# The simulator drives the engine only through its public surface
-# (read_batch / complete_prefetch / tick / hit_ratio / snapshot /
-# iter_workload_cmus), so the sharded facade slots in unchanged.
-from ..core.sharded import Engine
+# The simulator drives the kernel only through the client layer, which
+# itself only uses the public kernel surface (read_batch /
+# complete_prefetch / tick / ...), so the sharded facade slots in
+# unchanged.
 from ..core import block_key
+from ..core.client import CacheClient, PrefetchExecutor
+from ..core.sharded import Engine
 from ..core.types import PathT
 from .link import SharedLink
 from .workloads import Job, WorkloadSuite
+
+
+class LinkExecutor(PrefetchExecutor):
+    """PrefetchExecutor over the simulated shared link.
+
+    ``submit`` enqueues each candidate as a background-priority transfer
+    (skipping blocks already in flight — single-flight); the sim's event
+    loop completes or promotes them.  Completion/cancellation accounting
+    therefore lives in the event loop, not here: the executor only hands
+    candidates to the bandwidth model.
+    """
+
+    def __init__(self, link: SharedLink) -> None:
+        super().__init__()
+        self.link = link
+
+    def submit(self, candidates, now: float) -> None:
+        self.stats.submitted += len(candidates)
+        for ppath, psize in candidates:
+            pkey = block_key(ppath)
+            t = self.link.inflight.get(pkey)
+            if t is None:
+                self.link.enqueue(psize, pkey, demand=False,
+                                  callback=(ppath, psize))
+            elif t.callback is None:
+                # the in-flight transfer is pure demand: it will land
+                # without calling complete_prefetch, so this candidate
+                # must be cancelled, not skipped — otherwise its kernel
+                # pending-table entry leaks and suppresses re-issue
+                self.engine.cancel_prefetch(ppath)
+                self.stats.cancelled += 1
+            # else: an in-flight prefetch transfer for the same block —
+            # its completion clears the (shared) pending entry; skip
 
 
 @dataclass
@@ -44,15 +86,28 @@ class SimResult:
 
 
 class ClusterSim:
-    def __init__(self, suite: WorkloadSuite, engine: Engine,
+    def __init__(self, suite: WorkloadSuite, engine: Union[Engine, CacheClient],
                  bandwidth_Bps: float = 125e6, latency_s: float = 0.150,
                  local_latency_s: float = 0.0005,
                  local_bandwidth_Bps: float = 6e9,
                  trace_alloc: bool = False,
                  stop_job_at: Optional[Tuple[int, float]] = None) -> None:
         self.suite = suite
-        self.engine = engine
         self.link = SharedLink(bandwidth_Bps, latency_s)
+        # Accept either layer: a CacheClient (open_cache path) or a bare
+        # kernel.  Either way the sim re-routes prefetch transport onto its
+        # own link — inside the simulation, background bytes must contend
+        # for the modeled bandwidth, so an inline/threaded executor would
+        # be wrong here.  A passed client is reused (its previous executor
+        # is closed, with queued candidates cancelled on the kernel).
+        if isinstance(engine, CacheClient):
+            self.client = engine
+            self.client.set_executor(LinkExecutor(self.link))
+        else:
+            self.client = CacheClient(engine,
+                                      executor=LinkExecutor(self.link),
+                                      clock=lambda: self.now)
+        self.engine = self.client.engine
         self.local_latency = local_latency_s
         self.local_bw = local_bandwidth_Bps
         self.trace_alloc = trace_alloc
@@ -99,7 +154,7 @@ class ClusterSim:
             elif kind == "transfer_done":
                 self._on_transfer_done(*payload)
             elif kind == "tick":
-                self.engine.tick(self.now)
+                self.client.tick(self.now)
                 if self.trace_alloc:
                     self._sample_alloc()
                 if len(self._done) + len(self._stopped) < len(self._jobs):
@@ -126,11 +181,13 @@ class ClusterSim:
         compute, reqs = job.steps[i]
         waits = 0
         local_cost = 0.0
-        # batched read path: one engine call per step batch — the tick/
-        # allocation cadence runs once per batch instead of once per request
-        outs = self.engine.read_batch(reqs, self.now)
-        for out in outs:
-            for blk in out.blocks:
+        # batched client path: one kernel call per step batch (tick cadence
+        # amortized per batch); the client hands each outcome's prefetch
+        # candidates to the LinkExecutor, which puts them on the link at
+        # background priority.  The sim then settles the demand blocks.
+        results = self.client.read_batch(reqs, self.now)
+        for res in results:
+            for blk in res.blocks:
                 if blk.hit:
                     local_cost += self.local_latency + blk.size / self.local_bw
                     if self.link.pending(blk.key):
@@ -147,11 +204,6 @@ class ClusterSim:
                                           callback=None)
                     self._waiters.setdefault(blk.key, []).append(jid)
                     waits += 1
-            for (ppath, psize) in out.prefetches:
-                pkey = block_key(ppath)
-                if not self.link.pending(pkey):
-                    self.link.enqueue(psize, pkey, demand=False,
-                                      callback=(ppath, psize))
         self._outstanding[jid] = waits
         self._pump()
         if waits == 0:
@@ -174,7 +226,7 @@ class ClusterSim:
     def _on_transfer_done(self, key: str, demand: bool, callback) -> None:
         if callback is not None:
             ppath, psize = callback
-            self.engine.complete_prefetch(ppath, psize, self.now)
+            self.client.complete_prefetch(ppath, psize, self.now)
         for jid in self._waiters.pop(key, ()):  # wake demand waiters
             if jid in self._stopped:
                 continue

@@ -26,3 +26,22 @@ def test_overhead_smoke_emits_json(tmp_path):
         point = payload["sharded"][n]
         assert point["us_per_access"] > 0
         assert point["nodes"] > 0
+
+
+def test_prefetch_micro_client_axis_smoke(tmp_path):
+    """--smoke client-path axis: kernel loop vs SimExecutor client vs
+    ThreadedExecutor client, merged into the shared overhead JSON without
+    clobbering existing sections."""
+    from benchmarks import prefetch_micro
+
+    out = tmp_path / "BENCH_overhead.json"
+    out.write_text(json.dumps({"results": {"10000": {"us_per_access": 1}}}))
+    rows = prefetch_micro.main(smoke=True, json_path=out)
+    assert rows, "client-axis smoke produced no CSV rows"
+    payload = json.loads(out.read_text())
+    assert payload["results"]["10000"]["us_per_access"] == 1  # preserved
+    axis = payload["client_path"]
+    assert axis["smoke"] is True
+    for proto in ("kernel_loop", "client_sim", "client_threaded"):
+        assert axis[proto]["us_per_access"] > 0
+    assert "client_overhead_pct" in axis

@@ -11,7 +11,8 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import CacheConfig, IGTCache, Pattern, ShardedIGTCache, bundle
+from repro.core import (CacheConfig, IGTCache, Pattern, ShardedIGTCache,
+                        bundle, open_cache)
 from repro.core.access_stream_tree import AccessStreamTree
 from repro.core.pattern import (classify, classify_batch, fit_adaptive_ttl,
                                 fit_adaptive_ttl_arr, fit_adaptive_ttl_batch)
@@ -174,6 +175,57 @@ def test_sharded_n1_read_batch_matches_engine():
                     eng.complete_prefetch(p, s, t)
         t += 0.01
     assert mono.snapshot() == facade.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# client layer (PR 3): CacheClient+SimExecutor vs the caller-driven loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_client_sim_executor_matches_caller_driven_loop(seed):
+    """The caller layer is pure plumbing: a CacheClient with the inline
+    SimExecutor over n_shards=1 must produce bitwise-identical
+    ReadOutcomes, stats and tree state to the hand-rolled
+    read-then-complete loop every consumer used to carry (the cluster
+    sim's fetch/admit loop, the pipeline's inline mode, the examples)."""
+    store = mk_store()
+    loop = IGTCache(store, 192 * MB, cfg=CFG)
+    client = open_cache(store, 192 * MB, cfg=CFG, n_shards=1,
+                        executor="sim")
+    t = 0.0
+    for k, (fp, off, sz) in enumerate(mixed_trace(store, seed)):
+        res = client.read(fp, off, sz, t)       # executor completes inline
+        ol = loop.read(fp, off, sz, t)
+        for p, s in ol.prefetches:              # the caller-driven contract
+            loop.complete_prefetch(p, s, t)
+        assert outcome_tuple(res.outcome) == outcome_tuple(ol), \
+            f"divergence at access {k}: {fp} off={off}"
+        t += 0.011
+    assert client.engine.snapshot() == loop.snapshot()
+    assert client.engine.stats.snapshot() == loop.stats.snapshot()
+    assert client.engine.tree.node_count() == loop.tree.node_count()
+    ex = client.executor.stats
+    assert ex.completed == ex.submitted and ex.cancelled == 0
+
+
+def test_client_read_batch_matches_caller_driven_loop():
+    store = mk_store()
+    loop = IGTCache(store, 192 * MB, cfg=CFG)
+    client = open_cache(store, 192 * MB, cfg=CFG, n_shards=1,
+                        executor="sim")
+    reqs = mixed_trace(store, 11)[:600]
+    t = 0.0
+    for i in range(0, len(reqs), 8):
+        group = reqs[i:i + 8]
+        results = client.read_batch(group, t)
+        outs_l = loop.read_batch(group, t)
+        for o in outs_l:
+            for p, s in o.prefetches:
+                loop.complete_prefetch(p, s, t)
+        assert [outcome_tuple(r.outcome) for r in results] == \
+            [outcome_tuple(o) for o in outs_l]
+        t += 0.01
+    assert client.engine.snapshot() == loop.snapshot()
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,33 @@ def csv_row(name: str, value, derived: str = "") -> str:
     return line
 
 
+def merge_overhead_section(section_name: str, section: dict,
+                           json_path=None) -> Path:
+    """Read-modify-write one section of the shared perf-trajectory file
+    (BENCH_overhead.json): a benchmark's axis lands next to the
+    kernel/sharded/client numbers without clobbering them.  Smoke runs
+    land in the smoke file so they never overwrite the canonical
+    full-sweep record."""
+    if json_path is not None:
+        out = Path(json_path)
+    elif section.get("smoke"):
+        out = REPO_ROOT / "BENCH_overhead_smoke.json"
+    else:
+        out = REPO_ROOT / "BENCH_overhead.json"
+    payload = {}
+    if out.exists():
+        try:
+            payload = json.loads(out.read_text())
+        except ValueError:
+            payload = {}
+    payload[section_name] = section
+    payload.setdefault("bench", "overhead")
+    payload["generated_unix"] = round(time.time(), 1)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] merged {section_name} into {out}", flush=True)
+    return out
+
+
 def emit_json(name: str, payload: dict, path=None) -> Path:
     """Persist one benchmark's results as BENCH_<name>.json at the repo root
     so the perf trajectory is tracked across PRs (each PR overwrites its

@@ -21,14 +21,12 @@ from __future__ import annotations
 
 import argparse
 import gc
-import json
 import time
-from pathlib import Path
 
 import numpy as np
 
 # .common bootstraps sys.path with REPO_ROOT/src — must import before repro
-from .common import REPO_ROOT, build_world, csv_row, run_sim
+from .common import build_world, csv_row, merge_overhead_section, run_sim
 
 from repro.core import (CacheConfig, IGTCache, SimExecutor, ThreadedExecutor,
                         open_cache)
@@ -134,33 +132,8 @@ def client_axis(smoke: bool = False, seed: int = 0, json_path=None):
         (best["client_sim"] / best["kernel_loop"] - 1) * 100, 1)
     rows.append(csv_row("client_path.sim_overhead_vs_kernel_pct",
                         section["client_overhead_pct"]))
-    _merge_overhead_json(section, json_path)
+    merge_overhead_section("client_path", section, json_path)
     return rows
-
-
-def _merge_overhead_json(section: dict, json_path=None) -> Path:
-    """Read-modify-write the shared perf-trajectory file: the client axis
-    lands next to the kernel/sharded numbers without clobbering them.
-    Smoke runs land in the smoke file so they never overwrite the
-    canonical full-sweep record (same convention as overhead.py)."""
-    if json_path is not None:
-        out = Path(json_path)
-    elif section.get("smoke"):
-        out = REPO_ROOT / "BENCH_overhead_smoke.json"
-    else:
-        out = REPO_ROOT / "BENCH_overhead.json"
-    payload = {}
-    if out.exists():
-        try:
-            payload = json.loads(out.read_text())
-        except ValueError:
-            payload = {}
-    payload["client_path"] = section
-    payload.setdefault("bench", "overhead")
-    payload["generated_unix"] = round(time.time(), 1)
-    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    print(f"[bench] merged client_path into {out}", flush=True)
-    return out
 
 
 def main(scale: float = 1.0, seed: int = 0, smoke: bool = False,

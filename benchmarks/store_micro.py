@@ -1,0 +1,239 @@
+"""Storage-API micro-benchmarks (the ``store_path`` axis of this PR).
+
+Three questions the v2 ``BackingStore`` protocol was designed around:
+
+1. **ranged vs whole-block over-fetch** — a partial-extent read under
+   the v1 protocol fetched the block prefix ``[0, offset+length)`` and
+   sliced; ``fetch_range`` moves only the requested bytes.  Measured on
+   the simulated store (synthesis cost) and on a real ``LocalFSStore``
+   tree (seek+read vs full-prefix read).
+2. **batched vs serial demand fetches** — ``read_batch(fetch=True)``
+   funnels every miss of the batch through one ``fetch_demand`` call
+   (one ``fetch_many`` per shard under the ThreadedExecutor); the serial
+   path pays one round-trip per request.
+3. **synthesis vs simulated transfer** (satellite guard) — the hoisted
+   per-file digest + counter-based generator must synthesize a 4 MB
+   block far *under* the ~182 ms the transfer model charges for it, so
+   content generation can never distort a simulated result.  This is an
+   **assertion**, not just a number: the benchmark fails if synthesis
+   regresses past the transfer budget.
+
+Protocol: interleaved same-protocol repeats, best-of-N, GC paused
+(docs/PERF.md).  Results merge into ``BENCH_overhead.json`` under
+``store_path`` (``--smoke`` → ``BENCH_overhead_smoke.json``; exercised
+by tests/test_bench_smoke.py).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import os
+import tempfile
+import time
+
+import numpy as np
+
+# .common bootstraps sys.path with REPO_ROOT/src — must import before repro
+from .common import csv_row, merge_overhead_section
+
+from repro.core import CacheConfig, open_cache
+from repro.core.types import MB, block_key
+from repro.storage import (LocalFSStore, RemoteStore, TransferModel,
+                           make_dataset)
+
+
+def _timed(fn) -> float:
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+
+
+# ------------------------------------------------------------------ worlds
+
+def _sim_store():
+    store = RemoteStore()
+    store.add(make_dataset("ds", "big_files", n_files=8, file_size=64 * MB))
+    return store
+
+
+def _fs_tree(root: str, n_files: int, file_bytes: int) -> LocalFSStore:
+    rng = np.random.default_rng(0)
+    os.makedirs(os.path.join(root, "ds"), exist_ok=True)
+    chunk = rng.integers(0, 256, file_bytes, dtype=np.uint8).tobytes()
+    for i in range(n_files):
+        with open(os.path.join(root, "ds", f"{i:04d}.bin"), "wb") as f:
+            f.write(chunk)
+    return LocalFSStore(root, block_size=256 * 1024)
+
+
+def _range_trace(store, n: int, seed: int, read_len: int):
+    """(block_path, offset) pairs at random sub-block offsets."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    files = [p for p in store._files]
+    bs = store.block_size
+    for _ in range(n):
+        fp = files[int(rng.integers(0, len(files)))]
+        nblocks = max(1, store.file_size(fp) // bs)
+        b = int(rng.integers(0, nblocks))
+        off = int(rng.integers(0, max(1, bs - read_len)))
+        reqs.append((block_key(fp, b), off))
+    return reqs
+
+
+# --------------------------------------------------- axis 1: ranged reads
+
+def _bench_ranged(store, n: int, seed: int, read_len: int):
+    reqs = _range_trace(store, n, seed, read_len)
+
+    def ranged():
+        for bp, off in reqs:
+            store.fetch_range(bp, off, read_len)
+
+    def overfetch():            # the v1 protocol: prefix fetch + slice
+        for bp, off in reqs:
+            store.fetch_block(bp, off + read_len)[off:off + read_len]
+
+    t_r = _timed(ranged) / n * 1e6
+    t_o = _timed(overfetch) / n * 1e6
+    moved_r = n * read_len
+    moved_o = sum(off + read_len for _, off in reqs)
+    return {"ranged_us": round(t_r, 1), "overfetch_us": round(t_o, 1),
+            "speedup": round(t_o / max(t_r, 1e-9), 2),
+            "bytes_moved_ratio": round(moved_o / moved_r, 2)}
+
+
+# ------------------------------------------------ axis 2: batched demand
+
+def _batch_world(tmpdir: str, n_files: int):
+    root = os.path.join(tmpdir, "batchw")
+    store = _fs_tree(root, n_files=n_files, file_bytes=1 * MB)
+    cfg = CacheConfig(block_size=256 * 1024, min_share=4 * MB,
+                      rebalance_quantum=4 * MB)
+    return store, cfg
+
+
+def _bench_batched(tmpdir: str, n_reqs: int, batch: int, seed: int):
+    """Cold-miss demand fetches: read_batch funnel vs per-read serial.
+    Fresh tree + client per protocol run (every block touched once)."""
+    rng = np.random.default_rng(seed)
+
+    def requests(store):
+        files = [p for p in store._files]
+        rng.shuffle(files)
+        return [(fp, 0, 64 * 1024) for fp in files[:n_reqs]]
+
+    def serial():
+        store, cfg = _batch_world(tmpdir, n_reqs)
+        client = open_cache(store, 512 * MB, cfg=cfg, executor="threaded",
+                            fetch_bytes=True)
+        reqs = requests(store)
+
+        def go():
+            for fp, off, sz in reqs:
+                client.read(fp, off, sz)
+
+        us = _timed(go) / len(reqs) * 1e6
+        client.close()
+        return us
+
+    def batched():
+        store, cfg = _batch_world(tmpdir, n_reqs)
+        client = open_cache(store, 512 * MB, cfg=cfg, executor="threaded",
+                            fetch_bytes=True)
+        reqs = requests(store)
+
+        def go():
+            for i in range(0, len(reqs), batch):
+                client.read_batch(reqs[i:i + batch])
+
+        us = _timed(go) / len(reqs) * 1e6
+        client.close()
+        return us
+
+    t_s, t_b = serial(), batched()
+    return {"serial_us_per_req": round(t_s, 1),
+            "batched_us_per_req": round(t_b, 1),
+            "batch": batch,
+            "speedup": round(t_s / max(t_b, 1e-9), 2)}
+
+
+# ------------------------------------------- axis 3: synthesis-vs-transfer
+
+def _bench_synthesis(store, repeats: int):
+    """Satellite guard: synthesizing a 4 MB block must stay far under the
+    simulated transfer time for the same bytes (else content generation,
+    not the cost model, would dominate simulated runs)."""
+    bp = block_key(next(iter(store._files)), 0)
+    best = min(_timed(lambda: store.fetch_block(bp, 4 * MB))
+               for _ in range(repeats))
+    budget = TransferModel().remote_time(4 * MB)
+    assert best < budget, (
+        f"block synthesis regressed: {best * 1e3:.1f} ms per 4 MB block "
+        f"exceeds the simulated transfer budget {budget * 1e3:.1f} ms")
+    return {"synth_4mb_ms": round(best * 1e3, 3),
+            "transfer_4mb_ms": round(budget * 1e3, 1),
+            "synth_under_transfer": True,
+            "headroom_x": round(budget / max(best, 1e-9), 1)}
+
+
+# ------------------------------------------------------------------- main
+
+def main(smoke: bool = False, seed: int = 0, json_path=None):
+    n_ranged = 400 if smoke else 4_000
+    n_reqs = 48 if smoke else 512
+    repeats = 2 if smoke else 3
+    read_len = 64 * 1024
+    rows = []
+    section = {"smoke": smoke, "read_len": read_len}
+
+    with tempfile.TemporaryDirectory(prefix="igt-store-micro-") as tmpdir:
+        # interleaved best-of-N per protocol family (PERF.md); "best" is
+        # the run with the fastest primary metric
+        primary = {"ranged_sim": "ranged_us", "ranged_fs": "ranged_us",
+                   "batched_demand": "batched_us_per_req"}
+        best: dict = {}
+        for _ in range(repeats):
+            sim = _bench_ranged(_sim_store(), n_ranged, seed, read_len)
+            fs_store = _fs_tree(os.path.join(tmpdir, "rangedw"),
+                                n_files=64, file_bytes=1 * MB)
+            fs = _bench_ranged(fs_store, n_ranged, seed, read_len)
+            bt = _bench_batched(tmpdir, n_reqs=n_reqs, batch=16, seed=seed)
+            for name, got in (("ranged_sim", sim), ("ranged_fs", fs),
+                              ("batched_demand", bt)):
+                key = primary[name]
+                if name not in best or got[key] < best[name][key]:
+                    best[name] = got
+        section.update(best)
+        section["synthesis"] = _bench_synthesis(_sim_store(), repeats + 1)
+
+    for axis in ("ranged_sim", "ranged_fs"):
+        rows.append(csv_row(f"store_path.{axis}.ranged_us",
+                            section[axis]["ranged_us"],
+                            f"overfetch={section[axis]['overfetch_us']} "
+                            f"moved_x={section[axis]['bytes_moved_ratio']}"))
+    bd = section["batched_demand"]
+    rows.append(csv_row("store_path.batched_demand.us_per_req",
+                        bd["batched_us_per_req"],
+                        f"serial={bd['serial_us_per_req']}"))
+    rows.append(csv_row("store_path.synthesis.synth_4mb_ms",
+                        section["synthesis"]["synth_4mb_ms"],
+                        f"budget={section['synthesis']['transfer_4mb_ms']}"))
+    merge_overhead_section("store_path", section, json_path)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="down-scaled sweep for the test job")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seed=args.seed)

@@ -9,6 +9,12 @@ owns prefetch execution (here the deterministic ``SimExecutor`` — this
 script drives a virtual clock) and can return the actual bytes, so no
 caller ever loops over prefetch candidates by hand.
 
+Part 2 is the ``file://`` walkthrough: the same ``open_cache`` call
+pointed at a *real directory* (the URI store registry resolves
+``file:///dir`` to a ``LocalFSStore``), serving actual file bytes with
+ranged reads — the storage API that turns the reproduction from
+simulator-only into a system you can run on your own data.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -16,7 +22,9 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import os
 import random
+import tempfile
 
 import numpy as np
 
@@ -80,5 +88,57 @@ def main():
           "pinning, zipf → LRU.")
 
 
+def file_store_walkthrough():
+    """The ``file://`` path: cache a real directory tree.
+
+    Everything below works identically against ``sim://`` — that is the
+    point of the URI store registry: the client and kernel never learn
+    which backend serves the bytes.
+    """
+    print("\n--- file:// walkthrough ------------------------------------")
+    root = tempfile.mkdtemp(prefix="igt-quickstart-")
+    rng = np.random.default_rng(0)
+    for d in range(3):
+        os.makedirs(os.path.join(root, "corpus", f"{d:02d}"))
+        for i in range(4):
+            data = rng.integers(0, 256, 192 * 1024, dtype=np.uint8)
+            with open(os.path.join(root, "corpus", f"{d:02d}",
+                                   f"{i:03d}.bin"), "wb") as f:
+                f.write(data.tobytes())
+
+    cfg = CacheConfig(min_share=1 * MB, rebalance_quantum=1 * MB,
+                      block_size=64 * 1024)
+    # open_cache accepts a URI: file:///dir → LocalFSStore (real bytes,
+    # ranged reads); "threaded" runs background prefetch workers that
+    # retry transient store errors per the client's RetryPolicy
+    client = open_cache(f"file://{root}", 16 * MB, cfg=cfg,
+                        executor="threaded", fetch_bytes=True)
+    caps = client.store_capabilities()
+    print(f"store: LocalFSStore over {root}")
+    print(f"negotiated capabilities: ranges={caps.ranges} "
+          f"batching={caps.batching} concurrency={caps.concurrency}")
+
+    files = [("corpus", f"{d:02d}", f"{i:03d}.bin")
+             for d in range(3) for i in range(4)]
+    for rel in files:                       # pass 1: demand misses
+        res = client.read(rel, 0, client.meta.file_size(rel))
+        on_disk = open(os.path.join(root, *rel), "rb").read()
+        assert bytes(res.data) == on_disk, "client bytes != on-disk bytes"
+    hits = 0
+    for rel in files:                       # pass 2: served from cache
+        res = client.read(rel, 0, client.meta.file_size(rel))
+        hits += sum(1 for b in res.blocks if b.hit)
+    # partial-extent read: only the requested sub-range moves (fetch_range)
+    res = client.read(files[0], 100_000, 5_000)
+    assert len(res.data) == 5_000
+    client.flush(timeout=10.0)
+    snap = client.snapshot()
+    client.close()
+    print(f"pass 1 verified against on-disk bytes; pass 2 hit "
+          f"{hits}/{sum(1 for _ in files) * 3} blocks in cache")
+    print(f"executor accounting: {snap['executor']}")
+
+
 if __name__ == "__main__":
     main()
+    file_store_walkthrough()

@@ -13,7 +13,7 @@ byte movement through a ``BackingStore`` and prefetch execution through a
 from .access_stream_tree import (AccessStream, AccessStreamTree,
                                  ObservedChain, analyze_streams)
 from .baselines import BUNDLES, bundle, bundle_client, bundle_engine
-from .cache import CacheManageUnit, UnifiedCache, block_key
+from .cache import CacheManageUnit, UnifiedCache, path_key
 from .client import (BackingStore, CacheClient, ExecutorStats, KernelGuard,
                      NullExecutor, PrefetchExecutor, ReadResult, SimExecutor,
                      ThreadedExecutor, open_cache)
@@ -25,7 +25,8 @@ from .pattern import (PatternResult, classify, classify_batch,
                       fit_adaptive_ttl_batch)
 from .sharded import (GlobalRebalancer, ShardedIGTCache, make_engine,
                       shard_index)
-from .types import AccessRecord, CacheConfig, CacheStats, GB, MB, PathT, Pattern
+from .types import (AccessRecord, CacheConfig, CacheStats, GB, MB, PathT,
+                    Pattern, block_key, split_block_key)
 
 __all__ = [
     "AccessRecord", "AccessStream", "AccessStreamTree", "BUNDLES",
@@ -39,6 +40,6 @@ __all__ = [
     "bundle_client", "bundle_engine", "classify",
     "classify_batch", "detect_sequential", "fit_adaptive_ttl",
     "fit_adaptive_ttl_batch", "informative_depth", "ks_critical",
-    "ks_test_random", "make_engine", "open_cache", "shard_index",
-    "triangular_cdf",
+    "ks_test_random", "make_engine", "open_cache", "path_key",
+    "shard_index", "split_block_key", "triangular_cdf",
 ]

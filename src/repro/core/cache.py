@@ -29,7 +29,10 @@ from .types import CacheConfig, CacheStats, PathT, Pattern
 BlockKey = str
 
 
-def block_key(path: PathT) -> BlockKey:
+def path_key(path: PathT) -> BlockKey:
+    """String residency key for a block path (the ``UnifiedCache`` key
+    space).  Block *paths* themselves are built with
+    ``types.block_key(path, idx)``."""
     return "/".join(path)
 
 
@@ -386,7 +389,7 @@ class UnifiedCache:
                               on_evict=self._cmu_evicted,
                               dataset_bytes=dataset_bytes)
         cmu.created_at = now
-        prefix = block_key(root_path) + "/"
+        prefix = path_key(root_path) + "/"
         moved_bytes = 0
         default = self.default_cmu
         for key in [k for k in default.block_sub if k.startswith(prefix)]:
@@ -469,7 +472,7 @@ class UnifiedCache:
     # -- residency transitions -----------------------------------------------------
     def insert(self, path: PathT, size: int, cmu: CacheManageUnit,
                sub: SubStream) -> bool:
-        return self.insert_key(block_key(path), size, cmu, sub)
+        return self.insert_key(path_key(path), size, cmu, sub)
 
     def insert_key(self, key: BlockKey, size: int, cmu: CacheManageUnit,
                    sub: SubStream) -> bool:

@@ -17,16 +17,28 @@ a deterministic single-threaded state machine with the documented surface
     read / read_batch / complete_prefetch / cancel_prefetch / tick /
     pin / never_cache / stats / hit_ratio / snapshot / iter_workload_cmus
 
-The kernel never does I/O and never owns time: every call takes ``now``.
-This is the property-test surface (tests/test_equivalence.py) and stays
-available for callers that need full control (the discrete-event
-simulator owns bandwidth, so it drives the kernel through the client with
-a link-backed executor; see ``sim.cluster.LinkExecutor``).
+The kernel never does I/O, never imports the storage layer, and never
+owns time: every call takes ``now``.  This is the property-test surface
+(tests/test_equivalence.py) and stays available for callers that need
+full control (the discrete-event simulator owns bandwidth, so it drives
+the kernel through the client with a link-backed executor; see
+``sim.cluster.LinkExecutor``).
 
 **Client layer** — ``CacheClient`` wraps a kernel with
 
-  * a pluggable :class:`BackingStore` (``storage.RemoteStore`` satisfies
-    it) that supplies actual bytes, and
+  * a pluggable backing store on the **v2 storage protocol**
+    (``storage.api.BackingStore``: ``fetch_range`` / ``fetch_many`` /
+    ``capabilities``) that supplies actual bytes — partial-extent reads
+    fetch exact sub-block ranges instead of over-fetching whole blocks,
+    and batched reads funnel their demand misses through one
+    ``fetch_many`` call; legacy one-method ``fetch_block`` stores are
+    adapted transparently (``storage.api.as_backing_store``);
+  * a :class:`RetryPolicy`-guarded fetch path: transient store errors
+    (``storage.api.TransientStoreError``) retry with bounded backoff,
+    permanent errors propagate to the blocked reader and *cancel* the
+    affected prefetch candidates on the kernel, so the executor identity
+    ``submitted == completed + cancelled + deduped`` and the kernel
+    pending table survive a failing backend;
   * a :class:`PrefetchExecutor` that runs the kernel's prefetch
     candidates: the deterministic inline :class:`SimExecutor` (virtual
     clock; bitwise-equivalent to the caller-driven loop) or the
@@ -35,10 +47,13 @@ a link-backed executor; see ``sim.cluster.LinkExecutor``).
     in-queue dedup, and cancellation that calls ``cancel_prefetch`` on
     overflow/shutdown instead of silently dropping candidates).
 
-``open_cache(store, capacity, ...) -> CacheClient`` is the one
-constructor path all consumers share; every future scaling lever
-(multi-process shards, real object stores) plugs in behind these two
-protocols.  See docs/API.md for the full contract.
+``open_cache(store_or_uri, capacity, ...) -> CacheClient`` is the one
+constructor path all consumers share; ``store`` may be a store instance
+or a URI for the scheme registry (``"sim://default"``,
+``"file:///data"``, ``"mem://"``, ``"faulty+sim://..."`` — see
+``storage.api.open_store``).  Every future scaling lever (multi-process
+shards, S3/GCS adapters) plugs in behind these two protocols.  See
+docs/API.md for the full contract.
 """
 from __future__ import annotations
 
@@ -51,10 +66,10 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
 
 import numpy as np
 
-from .cache import block_key
+from .cache import path_key
 from .igtcache import EngineOptions, ReadOutcome
 from .sharded import Engine, ShardedIGTCache, make_engine
-from .types import CacheConfig, PathT
+from .types import CacheConfig, PathT, block_key
 
 __all__ = [
     "BackingStore", "CacheClient", "ExecutorStats", "KernelGuard",
@@ -62,15 +77,21 @@ __all__ = [
     "ThreadedExecutor", "open_cache",
 ]
 
+# One demand fetch: (file-or-block path, offset within it, length) — the
+# same shape as storage.api.RangeRequest (kept structural so the kernel
+# package does not import the storage package at import time).
+RangeRequest = Tuple[PathT, int, int]
+
 
 class BackingStore:
-    """Protocol for the byte source behind the cache (duck-typed; the
-    simulated ``storage.RemoteStore`` satisfies it as-is).
+    """Legacy (v1) byte-source protocol: one method
+    ``fetch_block(block_path, size) -> np.ndarray[uint8]`` returning the
+    first ``size`` bytes of the block at ``block_path``.
 
-    ``fetch_block(block_path, size) -> np.ndarray[uint8]`` returns the
-    first ``size`` bytes of the 4 MB block at ``block_path`` (a file path
-    tuple ending in ``"#<n>"``).  Adapters over real object stores (S3,
-    GCS) implement exactly this one method.
+    Kept for third-party stores written against the PR-3 API — the
+    client adapts them via ``storage.api.as_backing_store``.  New
+    backends should implement the ranged/batched v2 protocol
+    (``storage.api.BackingStore``) instead.
     """
 
     def fetch_block(self, block_path: PathT,
@@ -85,14 +106,17 @@ class ExecutorStats:
 
     submitted: int = 0        # candidates handed to submit()
     completed: int = 0        # complete_prefetch delivered to the kernel
-    cancelled: int = 0        # cancel_prefetch on overflow / shutdown
+    cancelled: int = 0        # cancel_prefetch on overflow/shutdown/failure
     deduped: int = 0          # dropped: same block already queued/in flight
-    demand_fetches: int = 0   # priority demand-miss fetches served
+    demand_fetches: int = 0   # priority demand-miss range fetches served
+    retries: int = 0          # transient store errors absorbed by RetryPolicy
+    fetch_errors: int = 0     # fetches that failed past the retry bound
 
     def snapshot(self) -> dict:
         return {"submitted": self.submitted, "completed": self.completed,
                 "cancelled": self.cancelled, "deduped": self.deduped,
-                "demand_fetches": self.demand_fetches}
+                "demand_fetches": self.demand_fetches,
+                "retries": self.retries, "fetch_errors": self.fetch_errors}
 
 
 class KernelGuard:
@@ -144,37 +168,63 @@ class PrefetchExecutor:
     the executor must eventually either ``complete_prefetch`` or
     ``cancel_prefetch`` every candidate on the kernel — never drop one
     silently (the kernel tracks pending candidates for dedup, so a
-    dropped candidate blocks that block's re-issue forever).
+    dropped candidate blocks that block's re-issue forever).  A fetch
+    that fails past the retry bound counts as ``cancel``, keeping the
+    identity intact under a failing backend.
     """
 
     def __init__(self) -> None:
         self.stats = ExecutorStats()
         self.engine: Optional[Engine] = None
-        self.backing: Optional[BackingStore] = None
+        self.backing = None               # storage.api.BackingStore or None
         self.guard: Optional[KernelGuard] = None
         self.clock: Callable[[], float] = time.monotonic
+        self.retry = None                 # storage.api.RetryPolicy
+        self._stats_lock = threading.Lock()
 
-    def attach(self, engine: Engine, backing: Optional[BackingStore],
-               guard: KernelGuard, clock: Callable[[], float]) -> None:
+    def attach(self, engine: Engine, backing, guard: KernelGuard,
+               clock: Callable[[], float], retry=None) -> None:
         if self.engine is not None and self.engine is not engine:
             raise RuntimeError("executor is already attached to a kernel")
         self.engine = engine
         self.backing = backing
         self.guard = guard
         self.clock = clock
+        if retry is not None:
+            self.retry = retry
+        elif self.retry is None:
+            from ..storage.api import RetryPolicy
+            self.retry = RetryPolicy()
 
     # -- candidate path -----------------------------------------------------
     def submit(self, candidates: Sequence[Tuple[PathT, int]],
                now: float) -> None:  # pragma: no cover - protocol
         raise NotImplementedError
 
-    # -- demand path (priority over prefetch) -------------------------------
-    def fetch_demand(self, requests: Sequence[Tuple[PathT, int]]
+    # -- fetch plumbing -----------------------------------------------------
+    def _note_retry(self, attempt: int, exc: BaseException) -> None:
+        with self._stats_lock:
+            self.stats.retries += 1
+
+    def fetch_ranges(self, requests: Sequence[RangeRequest]
                      ) -> List[np.ndarray]:
-        """Fetch demand-missed blocks; must preempt queued prefetches."""
-        self.stats.demand_fetches += len(requests)
-        assert self.backing is not None, "demand fetch needs a BackingStore"
-        return [self.backing.fetch_block(p, s) for p, s in requests]
+        """Retry-guarded raw range fetch (one ``fetch_many`` call)."""
+        assert self.backing is not None, "byte fetch needs a backing store"
+        try:
+            return self.retry.call(self.backing.fetch_many, requests,
+                                   on_retry=self._note_retry)
+        except BaseException:
+            with self._stats_lock:
+                self.stats.fetch_errors += 1
+            raise
+
+    # -- demand path (priority over prefetch) -------------------------------
+    def fetch_demand(self, requests: Sequence[RangeRequest]
+                     ) -> List[np.ndarray]:
+        """Fetch demand-missed ranges; must preempt queued prefetches."""
+        with self._stats_lock:
+            self.stats.demand_fetches += len(requests)
+        return self.fetch_ranges(requests)
 
     # -- lifecycle ----------------------------------------------------------
     def flush(self, timeout: Optional[float] = None) -> bool:
@@ -193,7 +243,9 @@ class SimExecutor(PrefetchExecutor):
     the non-threaded pipeline ran by hand, so a client with a SimExecutor
     is bitwise-equivalent to that loop (pinned in
     tests/test_equivalence.py).  ``max_fetch_bytes=0`` (default) moves no
-    bytes: pure-simulation callers only track sizes and latencies.
+    bytes: pure-simulation callers only track sizes and latencies.  A
+    candidate whose (capped) fetch fails past the retry bound is
+    cancelled on the kernel instead of completed.
     """
 
     def __init__(self, max_fetch_bytes: int = 0) -> None:
@@ -208,8 +260,15 @@ class SimExecutor(PrefetchExecutor):
         eng = self.engine
         for path, size in candidates:
             if self.backing is not None and self.max_fetch_bytes > 0:
-                self.backing.fetch_block(path, min(size,
-                                                   self.max_fetch_bytes))
+                try:
+                    self.retry.call(self.backing.fetch_range, path, 0,
+                                    min(size, self.max_fetch_bytes),
+                                    on_retry=self._note_retry)
+                except Exception:
+                    self.stats.fetch_errors += 1
+                    eng.cancel_prefetch(path)
+                    self.stats.cancelled += 1
+                    continue
             eng.complete_prefetch(path, size, now)
             self.stats.completed += 1
 
@@ -228,13 +287,15 @@ class NullExecutor(PrefetchExecutor):
             self.stats.cancelled += 1
 
 
-class _DemandItem:
-    __slots__ = ("path", "size", "data", "error", "event")
+class _DemandBatch:
+    """One shard's slice of a demand fetch: served by that shard's worker
+    in a single ``fetch_many`` call (shard-parallel batched fetches)."""
 
-    def __init__(self, path: PathT, size: int) -> None:
-        self.path = path
-        self.size = size
-        self.data: Optional[np.ndarray] = None
+    __slots__ = ("requests", "results", "error", "event")
+
+    def __init__(self, requests: List[RangeRequest]) -> None:
+        self.requests = requests
+        self.results: Optional[List[np.ndarray]] = None
         self.error: Optional[BaseException] = None
         self.event = threading.Event()
 
@@ -242,23 +303,23 @@ class _DemandItem:
 class _ShardQueue:
     """Two-class bounded queue for one shard worker.
 
-    Demand items (missed bytes a reader is blocked on) always pop before
-    background prefetch candidates and are never rejected; the background
-    class is bounded by ``depth`` and rejects on overflow (the caller
-    cancels the candidate on the kernel).  ``keys`` is the in-queue /
-    in-flight dedup set for background candidates.
+    Demand batches (missed ranges a reader is blocked on) always pop
+    before background prefetch candidates and are never rejected; the
+    background class is bounded by ``depth`` and rejects on overflow (the
+    caller cancels the candidate on the kernel).  ``keys`` is the
+    in-queue / in-flight dedup set for background candidates.
     """
 
     def __init__(self, depth: int) -> None:
         self.depth = depth
         self.cv = threading.Condition()
-        self.demand: Deque[_DemandItem] = deque()
+        self.demand: Deque[_DemandBatch] = deque()
         self.background: Deque[Tuple[PathT, int, str]] = deque()
         self.keys: Set[str] = set()          # queued + in-flight candidates
         self.outstanding = 0                 # background items not yet done
         self.closed = False
 
-    def put_demand(self, item: _DemandItem) -> bool:
+    def put_demand(self, item: _DemandBatch) -> bool:
         with self.cv:
             if self.closed:
                 return False
@@ -329,7 +390,10 @@ class ThreadedExecutor(PrefetchExecutor):
     bounded; an overflowing candidate is *cancelled on the kernel*
     (``cancel_prefetch``) so the pending-table never leaks, and shutdown
     cancels everything still queued.  Demand-miss fetches jump every
-    queue (strict priority) and are never rejected.
+    queue (strict priority), are never rejected, and arrive as per-shard
+    batches served in one ``fetch_many`` call each.  Background fetches
+    ride the client's :class:`RetryPolicy`; a fetch that still fails is
+    cancelled on the kernel — the worker survives a failing backend.
     """
 
     def __init__(self, queue_depth: int = 4096,
@@ -341,14 +405,13 @@ class ThreadedExecutor(PrefetchExecutor):
         self.poll_s = poll_s
         self._queues: List[_ShardQueue] = []
         self._workers: List[threading.Thread] = []
-        self._stats_lock = threading.Lock()
         self._stop = threading.Event()
         self._started = False
 
     # -- lifecycle ----------------------------------------------------------
-    def attach(self, engine: Engine, backing: Optional[BackingStore],
-               guard: KernelGuard, clock: Callable[[], float]) -> None:
-        super().attach(engine, backing, guard, clock)
+    def attach(self, engine: Engine, backing, guard: KernelGuard,
+               clock: Callable[[], float], retry=None) -> None:
+        super().attach(engine, backing, guard, clock, retry)
         if self._started:
             return
         self._started = True
@@ -406,7 +469,7 @@ class ThreadedExecutor(PrefetchExecutor):
         for path, size in candidates:
             sid = guard.shard_id(path)
             got = self._queues[sid].offer_background(path, size,
-                                                     block_key(path))
+                                                     path_key(path))
             if got == "queued":
                 continue
             if got == "dup":
@@ -423,27 +486,35 @@ class ThreadedExecutor(PrefetchExecutor):
                     self.stats.cancelled += 1
 
     # -- demand path --------------------------------------------------------
-    def fetch_demand(self, requests: Sequence[Tuple[PathT, int]]
+    def fetch_demand(self, requests: Sequence[RangeRequest]
                      ) -> List[np.ndarray]:
-        """Route each demand miss to its shard worker (priority class) and
-        block until all land — misses of one batch fetch shard-parallel."""
-        assert self.backing is not None, "demand fetch needs a BackingStore"
+        """Split the demand ranges by shard, hand each shard worker its
+        slice as one priority batch (served via a single ``fetch_many``),
+        and block until every slice lands — misses of one read/batch
+        fetch shard-parallel."""
+        assert self.backing is not None, "demand fetch needs a backing store"
         with self._stats_lock:
             self.stats.demand_fetches += len(requests)
-        items = []
-        for path, size in requests:
-            item = _DemandItem(path, size)
-            items.append(item)
-            if not self._queues[self.guard.shard_id(path)].put_demand(item):
-                item.error = RuntimeError(
+        by_shard: Dict[int, List[int]] = {}
+        for i, req in enumerate(requests):
+            by_shard.setdefault(self.guard.shard_id(req[0]), []).append(i)
+        batches: List[Tuple[List[int], _DemandBatch]] = []
+        for sid, idxs in by_shard.items():
+            batch = _DemandBatch([requests[i] for i in idxs])
+            batches.append((idxs, batch))
+            if not self._queues[sid].put_demand(batch):
+                batch.error = RuntimeError(
                     "demand fetch on a closed ThreadedExecutor")
-                item.event.set()
-        for item in items:
-            item.event.wait()
-        for item in items:
-            if item.error is not None:  # re-raise in the reader's thread
-                raise item.error
-        return [item.data for item in items]
+                batch.event.set()
+        for _idxs, batch in batches:
+            batch.event.wait()
+        out: List[Optional[np.ndarray]] = [None] * len(requests)
+        for idxs, batch in batches:
+            if batch.error is not None:  # re-raise in the reader's thread
+                raise batch.error
+            for i, data in zip(idxs, batch.results):
+                out[i] = data
+        return out  # type: ignore[return-value]
 
     # -- worker loop --------------------------------------------------------
     def _run(self, sid: int, q: _ShardQueue) -> None:
@@ -452,12 +523,13 @@ class ThreadedExecutor(PrefetchExecutor):
             got = q.get(self.poll_s)
             if got is None:
                 continue
-            if isinstance(got, _DemandItem):
-                # a failing backing store (real S3/GCS adapters will fail)
-                # must not kill the shard worker or strand the blocked
-                # reader: hand the error back through the item
+            if isinstance(got, _DemandBatch):
+                # a failing backing store must not kill the shard worker
+                # or strand the blocked reader: hand the error back
+                # through the batch (fetch_ranges already retried
+                # transient errors per the RetryPolicy)
                 try:
-                    got.data = self.backing.fetch_block(got.path, got.size)
+                    got.results = self.fetch_ranges(got.requests)
                 except BaseException as e:
                     got.error = e
                 finally:
@@ -471,17 +543,22 @@ class ThreadedExecutor(PrefetchExecutor):
                     if self.backing is not None and self.max_fetch_bytes > 0:
                         # the actual byte movement (capped: content is what
                         # a real store would stream; the kernel only needs
-                        # sizes)
-                        self.backing.fetch_block(
-                            path, min(size, self.max_fetch_bytes))
+                        # sizes), transient failures retried
+                        self.retry.call(
+                            self.backing.fetch_range, path, 0,
+                            min(size, self.max_fetch_bytes),
+                            on_retry=self._note_retry)
                     with guard.lock_shard(sid):
                         self.engine.complete_prefetch(path, size,
                                                       self.clock())
                     with self._stats_lock:
                         self.stats.completed += 1
                 except Exception:
-                    # failed fetch → the candidate will never complete:
-                    # release it on the kernel, keep the worker alive
+                    # failed past the retry bound → the candidate will
+                    # never complete: release it on the kernel, keep the
+                    # worker alive
+                    with self._stats_lock:
+                        self.stats.fetch_errors += 1
                     with guard.lock_shard(sid):
                         self.engine.cancel_prefetch(path)
                     with self._stats_lock:
@@ -492,7 +569,7 @@ class ThreadedExecutor(PrefetchExecutor):
 
 class ReadResult:
     """One client read: the kernel's per-block outcome plus, when the
-    client fetched through its BackingStore, the requested bytes."""
+    client fetched through its backing store, the requested bytes."""
 
     __slots__ = ("outcome", "data")
 
@@ -514,33 +591,65 @@ class ReadResult:
         return self.outcome.remote_bytes
 
 
+def _sync_block_size(store, cfg: Optional[CacheConfig]) -> None:
+    """Align a store's block geometry with the cache config (walking
+    wrapper ``inner`` chains, e.g. ``faulty+file://``).  Only objects
+    whose *class* declares an integer ``block_size`` are touched —
+    ``__getattr__``-delegating wrappers are skipped in favor of the
+    store they wrap, and property-backed geometries are left alone."""
+    if cfg is None:
+        return
+    obj, hops = store, 0
+    while obj is not None and hops < 4:
+        if (isinstance(getattr(type(obj), "block_size", None), int)
+                and obj.block_size != cfg.block_size):
+            obj.block_size = cfg.block_size
+        obj = obj.__dict__.get("inner") if hasattr(obj, "__dict__") else None
+        hops += 1
+
+
 class CacheClient:
     """The caller layer: reads + prefetch execution over one kernel.
 
     ``read``/``read_batch`` serve through the kernel under the shard
     guard, hand the kernel's prefetch candidates to the executor, and —
-    when asked for bytes — fetch hits inline and misses through the
-    executor's priority demand path.  All kernel introspection
-    (``stats``, ``snapshot``, ``iter_workload_cmus``) passes through.
+    when asked for bytes — fetch hits locally (exact sub-block ranges)
+    and misses through the executor's priority demand path
+    (shard-parallel ``fetch_many`` batches under the ThreadedExecutor).
+    All kernel introspection (``stats``, ``snapshot``,
+    ``iter_workload_cmus``) passes through.
+
+    ``backing`` accepts anything ``storage.api.as_backing_store``
+    understands: a v2 store, a legacy one-method ``fetch_block`` store
+    (adapted), or ``None`` for metadata-only clients.
 
     Time: pass ``now`` explicitly (virtual-clock callers) or omit it to
     use the client's ``clock`` (default ``time.monotonic``).
     """
 
     def __init__(self, engine: Engine, *,
-                 backing: Optional[BackingStore] = None,
+                 backing=None,
                  executor: Optional[PrefetchExecutor] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 fetch_bytes: bool = False) -> None:
+                 fetch_bytes: bool = False,
+                 retry=None) -> None:
+        from ..storage.api import RetryPolicy, as_backing_store
         self.engine = engine
-        self.backing = backing
+        self.backing = as_backing_store(backing)
+        # one block geometry everywhere: the kernel plans block paths
+        # with cfg.block_size, and stores resolve "#b" leaves with their
+        # own block_size — a mismatch would silently return wrong bytes
+        _sync_block_size(engine.meta, engine.cfg)
+        _sync_block_size(self.backing, engine.cfg)
+        self.retry = retry if retry is not None else RetryPolicy()
         self.clock = clock or time.monotonic
         self.guard = KernelGuard(engine)
         self.executor = executor if executor is not None else SimExecutor()
-        self.executor.attach(engine, backing, self.guard, self.clock)
+        self.executor.attach(engine, self.backing, self.guard, self.clock,
+                             self.retry)
         self.fetch_bytes = fetch_bytes
-        if fetch_bytes and backing is None:
-            raise ValueError("fetch_bytes=True needs a BackingStore")
+        if fetch_bytes and self.backing is None:
+            raise ValueError("fetch_bytes=True needs a backing store")
         self._closed = False
 
     # ------------------------------------------------------------------ read
@@ -555,13 +664,25 @@ class CacheClient:
             out = self.engine.read(file_path, offset, size, now)
         if out.prefetches:
             self.executor.submit(out.prefetches, now)
-        return self._finish(file_path, offset, size, out, fetch)
+        want = self.fetch_bytes if fetch is None else fetch
+        if not want or not out.blocks:
+            return ReadResult(out)
+        self._require_backing()
+        plan = self._plan_ranges(file_path, offset, size, out)
+        fetched: Dict[RangeRequest, np.ndarray] = {}
+        demand = [r for r, hit in plan if not hit]
+        if demand:
+            fetched.update(zip(demand, self.executor.fetch_demand(demand)))
+        self._fetch_hits([plan], fetched)
+        return ReadResult(out, self._assemble(plan, fetched))
 
     def read_batch(self, requests: Sequence[Tuple[PathT, int, int]],
                    now: Optional[float] = None, *,
                    fetch: Optional[bool] = None) -> List[ReadResult]:
         """One kernel ``read_batch`` (tick amortized per batch), prefetch
-        dispatch per outcome, demand bytes fetched shard-parallel."""
+        dispatch per outcome — and, when fetching bytes, *all* demand
+        misses of the batch funneled through one ``fetch_demand`` call
+        (one ``fetch_many`` per shard under the ThreadedExecutor)."""
         if now is None:
             now = self.clock()
         self.guard.acquire_all()
@@ -572,52 +693,76 @@ class CacheClient:
         for out in outs:
             if out.prefetches:
                 self.executor.submit(out.prefetches, now)
-        return [self._finish(fp, off, sz, out, fetch)
-                for (fp, off, sz), out in zip(requests, outs)]
-
-    def _finish(self, file_path: PathT, offset: int, size: int,
-                out: ReadOutcome, fetch: Optional[bool]) -> ReadResult:
         want = self.fetch_bytes if fetch is None else fetch
-        if not want or not out.blocks:
-            return ReadResult(out)
-        if self.backing is None:
-            raise ValueError("byte fetch requested without a BackingStore")
-        return ReadResult(out, self._fetch_range(file_path, offset, size,
-                                                 out))
+        if not want:
+            return [ReadResult(out) for out in outs]
+        self._require_backing()
+        plans = [self._plan_ranges(fp, off, sz, out) if out.blocks else []
+                 for (fp, off, sz), out in zip(requests, outs)]
+        all_demand: List[RangeRequest] = []
+        seen: Set[RangeRequest] = set()
+        for plan in plans:
+            for r, hit in plan:
+                if not hit and r not in seen:
+                    seen.add(r)
+                    all_demand.append(r)
+        fetched: Dict[RangeRequest, np.ndarray] = {}
+        if all_demand:
+            fetched.update(zip(all_demand,
+                               self.executor.fetch_demand(all_demand)))
+        self._fetch_hits(plans, fetched)
+        return [ReadResult(out,
+                           self._assemble(plan, fetched) if plan else None)
+                for out, plan in zip(outs, plans)]
 
-    def _fetch_range(self, file_path: PathT, offset: int, size: int,
-                     out: ReadOutcome) -> np.ndarray:
-        """Assemble the requested byte range: cache hits read locally
-        (synthesized by the backing store — the repo carries no block
-        payload store), demand misses go through the executor's priority
-        demand path (shard-parallel under the ThreadedExecutor)."""
+    # ------------------------------------------------------------ byte paths
+    def _require_backing(self) -> None:
+        if self.backing is None:
+            raise ValueError("byte fetch requested without a backing store")
+
+    def _plan_ranges(self, file_path: PathT, offset: int, size: int,
+                     out: ReadOutcome) -> List[Tuple[RangeRequest, bool]]:
+        """Per-block exact sub-ranges covering the requested extent:
+        ``[((block_path, start, length), hit), ...]`` in byte order.  The
+        v2 ranged protocol means only the requested bytes move — no
+        whole-block over-fetch on partial-extent reads."""
         bs = self.engine.cfg.block_size
         first = offset // bs
         # out.blocks carry populated block sizes (file tail may be short);
         # clamp the requested range to what the kernel actually served
         last_b = first + len(out.blocks) - 1
         end = min(offset + size, last_b * bs + out.blocks[-1].size)
-        pieces: List[Tuple[int, int, int]] = []   # (block, start, stop)
-        demand: List[Tuple[PathT, int]] = []
+        plan: List[Tuple[RangeRequest, bool]] = []
         for i, blk in enumerate(out.blocks):
             b = first + i
             start = max(offset, b * bs) - b * bs
             stop = min(end, b * bs + blk.size) - b * bs
-            pieces.append((b, start, stop))
-            if not blk.hit:
-                demand.append((file_path + (f"#{b}",), stop))
-        fetched: Dict[PathT, np.ndarray] = {}
-        if demand:
-            for (bp, _sz), data in zip(demand,
-                                       self.executor.fetch_demand(demand)):
-                fetched[bp] = data
-        chunks: List[np.ndarray] = []
-        for b, start, stop in pieces:
-            bp = file_path + (f"#{b}",)
-            data = fetched.get(bp)
-            if data is None:
-                data = self.backing.fetch_block(bp, stop)
-            chunks.append(np.asarray(data[start:stop], dtype=np.uint8))
+            if stop > start:
+                plan.append(((block_key(file_path, b), start, stop - start),
+                             blk.hit))
+        return plan
+
+    def _fetch_hits(self, plans: List[List[Tuple[RangeRequest, bool]]],
+                    fetched: Dict[RangeRequest, np.ndarray]) -> None:
+        """Read the cache-hit ranges of every plan locally in **one**
+        batched ``fetch_many`` (synthesized/served by the backing store —
+        the repo carries no block payload store), deduped across plans
+        and against already-demand-fetched ranges."""
+        local: List[RangeRequest] = []
+        for plan in plans:
+            for r, hit in plan:
+                if hit and r not in fetched:
+                    fetched[r] = None  # type: ignore[assignment]  # dedup
+                    local.append(r)
+        if local:
+            fetched.update(zip(local, self.executor.fetch_ranges(local)))
+
+    def _assemble(self, plan: List[Tuple[RangeRequest, bool]],
+                  fetched: Dict[RangeRequest, np.ndarray]) -> np.ndarray:
+        """Stitch one extent together from the fetched range map."""
+        chunks = [np.asarray(fetched[r], dtype=np.uint8) for r, _ in plan]
+        if not chunks:
+            return np.empty(0, dtype=np.uint8)
         return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
 
     # ------------------------------------------------------ kernel passthrough
@@ -671,9 +816,23 @@ class CacheClient:
     def hit_ratio(self) -> float:
         return self.engine.hit_ratio()
 
+    def store_capabilities(self):
+        """Negotiated capabilities of the backing store (``None`` for a
+        metadata-only client)."""
+        if self.backing is None:
+            return None
+        caps = getattr(self.backing, "capabilities", None)
+        if caps is None:
+            from ..storage.api import StoreCapabilities
+            return StoreCapabilities()
+        return caps()
+
     def snapshot(self) -> dict:
         s = self.engine.snapshot()
         s["executor"] = self.executor.stats.snapshot()
+        caps = self.store_capabilities()
+        if caps is not None:
+            s["store"] = {"capabilities": caps.snapshot()}
         return s
 
     def iter_workload_cmus(self):
@@ -686,7 +845,8 @@ class CacheClient:
         attached.  The cluster simulator uses this to re-route a client's
         prefetches onto its simulated link."""
         self.executor.close(cancel_pending=True)
-        executor.attach(self.engine, self.backing, self.guard, self.clock)
+        executor.attach(self.engine, self.backing, self.guard, self.clock,
+                        self.retry)
         self.executor = executor
 
     def flush(self, timeout: Optional[float] = None) -> bool:
@@ -721,25 +881,35 @@ def open_cache(store, capacity: int, *,
                options: Optional[EngineOptions] = None,
                n_shards: int = 1,
                executor: Union[str, PrefetchExecutor] = "sim",
-               backing: Optional[BackingStore] = None,
+               backing=None,
                clock: Optional[Callable[[], float]] = None,
                fetch_bytes: bool = False,
+               retry=None,
                queue_depth: int = 4096,
                max_fetch_bytes: int = 4096) -> CacheClient:
-    """The one constructor path: metadata store + capacity → CacheClient.
+    """The one constructor path: store (instance or URI) + capacity →
+    CacheClient.
 
-    ``store`` doubles as the kernel's ``StoreMeta`` and (unless
-    ``backing`` overrides it) the client's ``BackingStore`` — the
-    simulated ``RemoteStore`` satisfies both protocols.  ``executor``
-    picks the prefetch transport: ``"sim"`` (deterministic inline,
-    virtual-clock callers), ``"threaded"`` (per-shard background workers,
-    wall-clock callers), ``"none"`` (read-only: candidates cancelled), or
-    a pre-built :class:`PrefetchExecutor` instance.
+    ``store`` is either a store object or a URI for the scheme registry
+    (``"sim://default"``, ``"file:///data/dir"``, ``"mem://"``,
+    ``"faulty+sim://default?fail_rate=0.1&seed=7"`` — see
+    ``storage.api.open_store``).  It doubles as the kernel's
+    ``StoreMeta`` and (unless ``backing`` overrides it) the client's
+    backing store; legacy one-method ``fetch_block`` stores are adapted
+    automatically.  ``executor`` picks the prefetch transport: ``"sim"``
+    (deterministic inline, virtual-clock callers), ``"threaded"``
+    (per-shard background workers, wall-clock callers), ``"none"``
+    (read-only: candidates cancelled), or a pre-built
+    :class:`PrefetchExecutor` instance.  ``retry`` is the
+    ``storage.api.RetryPolicy`` guarding every byte fetch.
     """
+    if isinstance(store, str):
+        from ..storage.api import open_store
+        store = open_store(store)
     engine = make_engine(store, capacity, cfg=cfg, options=options,
                          n_shards=n_shards)
-    if backing is None and hasattr(store, "fetch_block"):
-        backing = store
+    if backing is None:
+        backing = store          # normalized (or rejected) by CacheClient
     if isinstance(executor, str):
         try:
             kind = _EXECUTORS[executor]
@@ -755,4 +925,4 @@ def open_cache(store, capacity: int, *,
         else:
             executor = NullExecutor()
     return CacheClient(engine, backing=backing, executor=executor,
-                       clock=clock, fetch_bytes=fetch_bytes)
+                       clock=clock, fetch_bytes=fetch_bytes, retry=retry)

@@ -45,12 +45,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .access_stream_tree import (AccessStream, AccessStreamTree,
                                  ObservedChain, analyze_streams)
 from .allocation import FluidAllocator, QuiverAllocator, Rebalancer
-from .cache import (CacheManageUnit, SubStream, UnifiedCache, block_key)
+from .cache import (CacheManageUnit, SubStream, UnifiedCache, path_key)
 from .eviction import EagerEviction
 from .meta import LevelCache, StoreMeta
 from .prefetch import (block_sequential_candidates, sequential_candidates,
                        statistical_candidates)
-from .types import CacheConfig, CacheStats, PathT, Pattern
+from .types import (CacheConfig, CacheStats, PathT, Pattern, block_key,
+                    split_block_key)
 
 
 @dataclass
@@ -313,8 +314,8 @@ class IGTCache:
 
     def _read_block(self, file_path: PathT, b: int, bsize: int, now: float,
                     out: ReadOutcome) -> None:
-        leaf_path = file_path + (f"#{b}",)
-        key = block_key(leaf_path)
+        leaf_path = block_key(file_path, b)
+        key = path_key(leaf_path)
         levels = self._resolve_levels(file_path, b)
         self.tree.observe(levels, now, bsize)
         cmu, sub, governing = self._route(file_path, leaf_path, now, b)
@@ -600,7 +601,7 @@ class IGTCache:
             cmu.stat_prefetch_done = True
             cands.extend(statistical_candidates(
                 self.meta, cmu.root_path, cmu.quota, cmu.dataset_bytes,
-                self.cfg, lambda p: self.cache.resident(block_key(p))))
+                self.cfg, lambda p: self.cache.resident(path_key(p))))
 
     def _stride_prefetch(self, file_path: PathT, b: int,
                          enhanced: bool) -> List[Tuple[PathT, int]]:
@@ -620,7 +621,7 @@ class IGTCache:
         cands = []
         for nb in range(b + 1, min(nblocks, b + 1 + depth)):
             bsize = min(self.cfg.block_size, fsize - nb * self.cfg.block_size)
-            cands.append((file_path + (f"#{nb}",), bsize))
+            cands.append((block_key(file_path, nb), bsize))
         return self._dedup_prefetch(cands)
 
     def _sfp_observe(self, file_path: PathT, out: ReadOutcome,
@@ -642,7 +643,7 @@ class IGTCache:
                     for nb in range(min(nblocks, 8)):
                         bsize = min(self.cfg.block_size,
                                     fsize - nb * self.cfg.block_size)
-                        cands.append((best + (f"#{nb}",), bsize))
+                        cands.append((block_key(best, nb), bsize))
         self._sfp_prev[ds] = file_path
         got = self._dedup_prefetch(cands)
         out.prefetches.extend(got)
@@ -651,7 +652,7 @@ class IGTCache:
     def _dedup_prefetch(self, cands: List[Tuple[PathT, int]]):
         out = []
         for path, size in cands:
-            key = block_key(path)
+            key = path_key(path)
             if key in self._pending_prefetch or self.cache.resident(key):
                 continue
             self._pending_prefetch.add(key)
@@ -661,11 +662,11 @@ class IGTCache:
 
     def complete_prefetch(self, path: PathT, size: int, now: float) -> bool:
         """Background fetch landed — admit without polluting the tree."""
-        key = block_key(path)
+        key = path_key(path)
         self._pending_prefetch.discard(key)
         if self.cache.resident(key):
             return True
-        file_path = path[:-1] if path[-1].startswith("#") else path
+        file_path, _ = split_block_key(path)
         ctx = self._file_ctx(file_path)
         cmu = self._resolve_ctx_cmu(ctx)
         chain = ctx.chain
@@ -687,7 +688,7 @@ class IGTCache:
         return ok
 
     def cancel_prefetch(self, path: PathT) -> None:
-        self._pending_prefetch.discard(block_key(path))
+        self._pending_prefetch.discard(path_key(path))
 
     # ------------------------------------------------------------------ tick
     def tick(self, now: float) -> None:

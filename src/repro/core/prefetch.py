@@ -19,7 +19,7 @@ from typing import Iterable, List, Optional, Tuple
 
 from .access_stream_tree import AccessStream
 from .meta import StoreMeta
-from .types import CacheConfig, PathT, Pattern
+from .types import CacheConfig, PathT, Pattern, block_key
 
 # A prefetch candidate is (block_path, size).
 Candidate = Tuple[PathT, int]
@@ -66,7 +66,7 @@ def _expand_candidate(meta: StoreMeta, path: PathT, node: Optional[AccessStream]
             if block_filter is not None and bkey not in block_filter:
                 continue
             bsize = min(cfg.block_size, size - b * cfg.block_size)
-            out.append((path + (bkey,), bsize))
+            out.append((block_key(path, b), bsize))
             budget -= bsize
             if budget <= 0:
                 break
@@ -148,7 +148,7 @@ def block_sequential_candidates(meta: StoreMeta, file_node: AccessStream,
         if b >= nblocks:
             break
         bsize = min(cfg.block_size, size - b * cfg.block_size)
-        out.append((file_node.path + (f"#{b}",), bsize))
+        out.append((block_key(file_node.path, b), bsize))
         budget -= bsize
         if budget <= 0:
             break

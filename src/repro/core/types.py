@@ -19,6 +19,32 @@ MB = 1024 * 1024
 GB = 1024 * MB
 
 
+def block_key(path: PathT, idx: int) -> PathT:
+    """Block path for block ``idx`` of file ``path``.
+
+    The one place the ``"#<n>"`` leaf convention is constructed — every
+    layer (client fetch paths, token pipeline, store block enumeration)
+    builds block paths through here so the convention cannot drift.
+    """
+    return path + (f"#{idx}",)
+
+
+def split_block_key(path: PathT) -> Tuple[PathT, Optional[int]]:
+    """Inverse of :func:`block_key`: ``(file_path, block_idx)``.
+
+    A path without a ``"#<n>"`` leaf returns ``(path, None)`` — callers
+    that accept both file and block paths branch on the second element.
+    A leaf that merely *starts* with ``#`` (a real file can be named
+    ``"#notes"``) is not a block key either.
+    """
+    if path and path[-1][:1] == "#":
+        try:
+            return path[:-1], int(path[-1][1:])
+        except ValueError:
+            return path, None
+    return path, None
+
+
 class Pattern(enum.Enum):
     UNKNOWN = "unknown"
     SEQUENTIAL = "sequential"

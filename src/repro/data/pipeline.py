@@ -30,7 +30,7 @@ import numpy as np
 
 from ..core.client import CacheClient, SimExecutor, ThreadedExecutor
 from ..core.sharded import Engine
-from ..core.types import MB, PathT
+from ..core.types import MB, PathT, block_key
 from ..storage.datasets import DatasetSpec, make_dataset
 from ..storage.object_store import RemoteStore
 
@@ -117,7 +117,7 @@ class CachedTokenPipeline:
     def _synth_tokens(self, fpath: PathT, offset: int) -> np.ndarray:
         # deterministic synthetic tokens for the sample's byte range
         block = offset // (4 * MB)
-        raw = self.store.fetch_block(fpath + (f"#{block}",),
+        raw = self.store.fetch_block(block_key(fpath, block),
                                      self.sample_bytes)
         tokens = raw.astype(np.int64)
         tokens = (tokens[0::4] * 16777619 + tokens[1::4] * 65537

@@ -29,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 # itself only uses the public kernel surface (read_batch /
 # complete_prefetch / tick / ...), so the sharded facade slots in
 # unchanged.
-from ..core import block_key
+from ..core import path_key
 from ..core.client import CacheClient, PrefetchExecutor
 from ..core.sharded import Engine
 from ..core.types import PathT
@@ -54,7 +54,7 @@ class LinkExecutor(PrefetchExecutor):
     def submit(self, candidates, now: float) -> None:
         self.stats.submitted += len(candidates)
         for ppath, psize in candidates:
-            pkey = block_key(ppath)
+            pkey = path_key(ppath)
             t = self.link.inflight.get(pkey)
             if t is None:
                 self.link.enqueue(psize, pkey, demand=False,

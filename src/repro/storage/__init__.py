@@ -1,5 +1,25 @@
-"""Simulated disaggregated remote storage (S3-style) for IGTCache."""
-from .datasets import DatasetSpec, make_dataset
-from .object_store import RemoteStore, TransferModel
+"""The storage layer: URI-addressed stores behind one v2 protocol.
 
-__all__ = ["DatasetSpec", "RemoteStore", "TransferModel", "make_dataset"]
+``open_store(uri)`` is the front door — ``sim://`` (simulated S3-style
+object store), ``file:///dir`` (real directory tree), ``mem://``
+(in-memory test store), ``faulty+<scheme>://`` (seeded fault injection).
+All of them satisfy ``core.meta.StoreMeta`` for the kernel and the
+ranged/batched ``BackingStore`` v2 protocol for the client; legacy
+one-method ``fetch_block`` stores keep working through
+``as_backing_store``.  See docs/API.md "Storage API".
+"""
+from .api import (BackingStore, FaultyStore, LegacyStoreAdapter, MemStore,
+                  RetryPolicy, StoreCapabilities, StoreError, StoreMetaIndex,
+                  TransientStoreError, as_backing_store, open_store,
+                  register_scheme, registered_schemes)
+from .datasets import DatasetSpec, make_dataset
+from .local_fs import LocalFSStore
+from .object_store import ObjectStoreSim, RemoteStore, TransferModel
+
+__all__ = [
+    "BackingStore", "DatasetSpec", "FaultyStore", "LegacyStoreAdapter",
+    "LocalFSStore", "MemStore", "ObjectStoreSim", "RemoteStore",
+    "RetryPolicy", "StoreCapabilities", "StoreError", "StoreMetaIndex",
+    "TransferModel", "TransientStoreError", "as_backing_store",
+    "make_dataset", "open_store", "register_scheme", "registered_schemes",
+]

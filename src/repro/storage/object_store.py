@@ -1,25 +1,35 @@
-"""The remote object store + transfer cost model.
+"""The simulated remote object store + transfer cost model (``sim://``).
 
-Implements the ``repro.core.meta.StoreMeta`` protocol for IGTCache and a
-shared-link transfer model calibrated to the paper's testbed (§5.1): ~150 ms
-request latency, ~1 Gbps aggregate remote bandwidth.  The link is a single
-FIFO resource — concurrent jobs and background prefetches contend for it,
-which is exactly the effect the hierarchical-prefetch experiment (Fig. 7/9)
-depends on.
+Implements the ``repro.core.meta.StoreMeta`` protocol for IGTCache (via
+the shared :class:`~repro.storage.api.StoreMetaIndex`) and a shared-link
+transfer model calibrated to the paper's testbed (§5.1): ~150 ms request
+latency, ~1 Gbps aggregate remote bandwidth.  The link is a single FIFO
+resource — concurrent jobs and background prefetches contend for it,
+which is exactly the effect the hierarchical-prefetch experiment
+(Fig. 7/9) depends on.
 
 Content is synthesized deterministically from the block key (for the real
-training pipeline); the simulator only uses sizes/latencies.
+training pipeline); the simulator only uses sizes/latencies.  Synthesis
+is the v2 ranged path: a per-file blake2b seed is hashed **once** and
+cached (the old code rebuilt a digest and a ``default_rng`` per block on
+the hot demand path), and bytes come from a counter-based generator
+(``api.synth_range``) so any sub-range materializes directly —
+``fetch_range(p, o, n) == fetch_block(p, o+n)[o:]`` without generating
+the prefix.  ``benchmarks/store_micro.py`` asserts synthesis stays far
+under the simulated transfer time, so the sim's cost model, not content
+generation, dominates any measured run.
 """
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..core.types import MB, PathT
-from .datasets import DatasetSpec, FileEntry
+from ..core.types import PathT
+from .api import (BackingStore, StoreCapabilities, StoreMetaIndex,
+                  path_seed, register_scheme, synth_range)
+from .datasets import DatasetSpec
 
 
 @dataclass
@@ -39,96 +49,69 @@ class TransferModel:
         return self.local_latency_s + nbytes / self.local_bandwidth_Bps
 
 
-class RemoteStore:
+class RemoteStore(StoreMetaIndex, BackingStore):
     """Dataset registry + metadata resolution + content synthesis."""
 
     def __init__(self, transfer: Optional[TransferModel] = None) -> None:
+        super().__init__()
         self.datasets: Dict[str, DatasetSpec] = {}
         self.transfer = transfer or TransferModel()
-        self._files: Dict[PathT, FileEntry] = {}
-        self._dirs: Dict[PathT, List[str]] = {}
-        self._index: Dict[Tuple[PathT, str], int] = {}
-        self._subtree_bytes: Dict[PathT, int] = {}
-        self._flat_index: Dict[PathT, Tuple[int, int]] = {}
+        # hoisted digest state: one blake2b per *file*, reused by every
+        # block-level fetch of that file (the demand hot path)
+        self._seed_cache: Dict[PathT, int] = {}
 
     # -- registry -------------------------------------------------------------
     def add(self, spec: DatasetSpec) -> None:
         self.datasets[spec.name] = spec
         for f in spec.files:
-            self._files[f.path] = f
+            self._register_file(f.path, f.size)
         for parent, names in spec.dirs.items():
-            self._dirs[parent] = names
-            for i, n in enumerate(names):
-                self._index[(parent, n)] = i
+            self._register_dir(parent, names)
         # root listing across datasets
-        roots = sorted(self.datasets.keys())
-        self._dirs[()] = roots
-        for i, n in enumerate(roots):
-            self._index[((), n)] = i
-        self._subtree_bytes.clear()
-        self._flat_index.clear()
+        self._register_dir((), sorted(self.datasets.keys()))
+        self._invalidate_derived()
 
-    # -- StoreMeta protocol -----------------------------------------------------
-    def listing(self, path: PathT) -> List[str]:
-        return self._dirs.get(path, [])
+    # -- content (BackingStore v2) --------------------------------------------
+    def capabilities(self) -> StoreCapabilities:
+        return StoreCapabilities(ranges=True, batching=False, concurrency=8)
 
-    def listing_size(self, path: PathT) -> int:
-        return len(self._dirs.get(path, ()))
+    def _file_seed(self, file_path: PathT) -> int:
+        seed = self._seed_cache.get(file_path)
+        if seed is None:
+            seed = path_seed(file_path)
+            self._seed_cache[file_path] = seed
+        return seed
 
-    def child_index(self, path: PathT, name: str) -> int:
-        return self._index.get((path, name), 0)
+    def fetch_range(self, path: PathT, offset: int,
+                    length: int) -> np.ndarray:
+        """Deterministic synthetic bytes for any sub-range — generated
+        directly, no prefix over-synthesis.  Each file is one content
+        stream seeded by its path; a block path is resolved to the
+        absolute file offset (``StoreMetaIndex._absolute_range``), so
+        file-path and block-path addressing return identical bytes —
+        the same coherence contract the real stores keep."""
+        file_path, abs_off = self._absolute_range(path, offset, length)
+        return synth_range(self._file_seed(file_path), abs_off, length)
 
-    def is_file(self, path: PathT) -> bool:
-        return path in self._files
+    def fetch_block(self, path: PathT, size: int) -> np.ndarray:
+        """Legacy v1 surface: first ``size`` bytes of the block at
+        ``path`` (kept verbatim — third-party callers and the token
+        pipeline address content this way)."""
+        return self.fetch_range(path, 0, size)
 
-    def file_size(self, path: PathT) -> int:
-        f = self._files.get(path)
-        return f.size if f is not None else 0
 
-    def subtree_bytes(self, path: PathT) -> int:
-        cached = self._subtree_bytes.get(path)
-        if cached is not None:
-            return cached
-        total = 0
-        for fpath, f in self._files.items():
-            if fpath[:len(path)] == path:
-                total += f.size
-        self._subtree_bytes[path] = total
-        return total
+# The class is the repo's object-store *simulator*; the alias names it as
+# such where the distinction matters (the ``faulty+sim://`` wrapper docs).
+ObjectStoreSim = RemoteStore
 
-    def iter_block_keys(self, path: PathT,
-                        block_size: int = 4 * MB) -> Iterator[Tuple[PathT, int]]:
-        for fpath, f in self._files.items():
-            if fpath[:len(path)] != path:
-                continue
-            nblocks = max(1, -(-f.size // block_size))
-            for b in range(nblocks):
-                yield fpath + (f"#{b}",), min(block_size, f.size - b * block_size)
 
-    def flat_block_index(self, file_path: PathT, block: int,
-                         block_size: int = 4 * MB) -> Tuple[int, int]:
-        """Global block ordinal within the file's dataset (traversal order)."""
-        if not self._flat_index:
-            self._build_flat_index(block_size)
-        start, total = self._flat_index.get(file_path, (0, 1))
-        return start + block, total
+def _sim_factory(url, **params):
+    transfer_keys = ("latency_s", "bandwidth_Bps", "local_latency_s",
+                     "local_bandwidth_Bps")
+    transfer_kw = {k: params.pop(k) for k in transfer_keys if k in params}
+    if params:
+        raise ValueError(f"sim://: unknown parameters {sorted(params)}")
+    return RemoteStore(TransferModel(**transfer_kw))
 
-    def _build_flat_index(self, block_size: int) -> None:
-        per_ds_cursor: Dict[str, int] = {}
-        starts: Dict[PathT, int] = {}
-        for fpath, f in self._files.items():  # insertion = traversal order
-            ds = fpath[0]
-            cur = per_ds_cursor.get(ds, 0)
-            starts[fpath] = cur
-            per_ds_cursor[ds] = cur + max(1, -(-f.size // block_size))
-        for fpath in starts:
-            self._flat_index[fpath] = (starts[fpath], per_ds_cursor[fpath[0]])
 
-    # -- content (for the real training pipeline) --------------------------------
-    def fetch_block(self, block_path: PathT, size: int) -> np.ndarray:
-        """Deterministic synthetic bytes for a block (seeded by its key)."""
-        seed = int.from_bytes(
-            hashlib.blake2b("/".join(block_path).encode(),
-                            digest_size=8).digest(), "little")
-        rng = np.random.default_rng(seed)
-        return rng.integers(0, 256, size=size, dtype=np.uint8)
+register_scheme("sim", _sim_factory)

@@ -3,7 +3,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cache import CacheManageUnit, UnifiedCache, block_key
+from repro.core.cache import CacheManageUnit, UnifiedCache, path_key
 from repro.core.types import CacheConfig, Pattern
 
 MB = 1 << 20
@@ -61,9 +61,9 @@ def test_migration_on_cmu_creation():
     key_path = ("x", "f1", "#0")
     assert c.insert(key_path, MB, d, sub)
     cmu = c.create_cmu(("x",), dataset_bytes=10 * MB, now=0.0)
-    assert c.resident(block_key(key_path))
-    assert cmu.resident(block_key(key_path))
-    assert not d.resident(block_key(key_path))
+    assert c.resident(path_key(key_path))
+    assert cmu.resident(path_key(key_path))
+    assert not d.resident(path_key(key_path))
     assert cmu.used == MB
 
 

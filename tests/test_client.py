@@ -15,7 +15,7 @@ import pytest
 
 from repro.core import (CacheClient, CacheConfig, IGTCache, NullExecutor,
                         ShardedIGTCache, SimExecutor, ThreadedExecutor,
-                        block_key, open_cache)
+                        path_key, open_cache)
 from repro.core.types import MB
 from repro.data.pipeline import CachedTokenPipeline, make_token_dataset
 from repro.storage import RemoteStore, make_dataset
@@ -84,7 +84,7 @@ def test_overflow_cancels_on_kernel_not_drops():
     client = CacheClient(engine, backing=gated, executor=ex)
     cands = seq_candidates(store, engine, n=24)
     assert len(cands) >= 8, "workload failed to generate candidates"
-    issued = {block_key(p) for p, _ in cands}
+    issued = {path_key(p) for p, _ in cands}
     assert issued <= engine._pending_prefetch
 
     ex.submit(cands, 1.0)      # worker blocked: 1 in flight + 2 queued max
@@ -113,7 +113,7 @@ def test_shutdown_cancels_queued_candidates():
     client.close(cancel_pending=True)       # everything still queued: cancel
     assert ex.stats.cancelled > 0
     assert executor_identity(ex.stats) == ex.stats.submitted
-    issued = {block_key(p) for p, _ in cands}
+    issued = {path_key(p) for p, _ in cands}
     assert not (engine._pending_prefetch & issued)
 
 
@@ -163,7 +163,7 @@ def test_submit_after_close_cancels_not_leaks():
     before = ex.stats.cancelled
     ex.submit(cands, 1.0)   # late offer: queues are closed → cancel path
     assert ex.stats.cancelled >= before + len(cands)
-    issued = {block_key(p) for p, _ in cands}
+    issued = {path_key(p) for p, _ in cands}
     assert not (engine._pending_prefetch & issued)
 
 

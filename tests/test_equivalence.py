@@ -228,6 +228,44 @@ def test_client_read_batch_matches_caller_driven_loop():
     assert client.engine.snapshot() == loop.snapshot()
 
 
+@pytest.mark.parametrize("seed", [0, 7])
+def test_open_cache_uri_v2_store_matches_instance_client(seed):
+    """Acceptance (this PR): ``open_cache("sim://default", ...)`` — the
+    URI front door resolving to the v2 ranged/batched store protocol —
+    is bitwise-equivalent to the PR-3 store-instance client on the
+    seeded mixed traces: identical ReadOutcomes, stats, tree state, and
+    identical fetched bytes."""
+    ref_store = mk_store()
+    ref = open_cache(ref_store, 192 * MB, cfg=CFG, n_shards=1,
+                     executor="sim")
+    uri = open_cache("sim://default", 192 * MB, cfg=CFG, n_shards=1,
+                     executor="sim")
+    # register the identical dataset layouts on the URI-created store
+    uri.meta.add(make_dataset("seqset", "flat_files", n_files=250,
+                              small_file_size=256 * 1024))
+    uri.meta.add(make_dataset("randset", "dir_tree", n_dirs=20,
+                              files_per_dir=15, small_file_size=256 * 1024))
+    uri.meta.add(make_dataset("bigfiles", "big_files", n_files=10,
+                              file_size=24 * MB))
+    t = 0.0
+    for k, (fp, off, sz) in enumerate(mixed_trace(ref_store, seed)):
+        want = k % 97 == 0       # spot-check the byte path too
+        ru = uri.read(fp, off, sz, t, fetch=want)
+        rr = ref.read(fp, off, sz, t, fetch=want)
+        assert outcome_tuple(ru.outcome) == outcome_tuple(rr.outcome), \
+            f"divergence at access {k}: {fp} off={off}"
+        if want and ru.blocks:
+            assert np.array_equal(ru.data, rr.data), \
+                f"byte divergence at access {k}: {fp} off={off}"
+        t += 0.011
+    assert uri.engine.snapshot() == ref.engine.snapshot()
+    assert uri.engine.stats.snapshot() == ref.engine.stats.snapshot()
+    assert uri.engine.tree.node_count() == ref.engine.tree.node_count()
+    for c in (uri, ref):
+        ex = c.executor.stats
+        assert ex.completed == ex.submitted and ex.cancelled == 0
+
+
 # ---------------------------------------------------------------------------
 # vectorized analytics vs the scalar reference implementations
 # ---------------------------------------------------------------------------

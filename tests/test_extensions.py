@@ -31,9 +31,9 @@ def test_never_cache_passes_through():
     for t in range(3):
         eng.read(fa.path, 0, fa.size, float(t))
         eng.read(fb.path, 0, fb.size, float(t) + 0.5)
-    from repro.core import block_key
-    assert eng.cache.resident(block_key(fa.path + ("#0",)))
-    assert not eng.cache.resident(block_key(fb.path + ("#0",)))
+    from repro.core import path_key
+    assert eng.cache.resident(path_key(fa.path + ("#0",)))
+    assert not eng.cache.resident(path_key(fb.path + ("#0",)))
 
 
 def test_pin_exempts_from_ttl():

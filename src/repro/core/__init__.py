@@ -23,23 +23,27 @@ from .meta import LevelCache
 from .pattern import (PatternResult, classify, classify_batch,
                       detect_sequential, fit_adaptive_ttl,
                       fit_adaptive_ttl_batch)
-from .sharded import (GlobalRebalancer, ShardedIGTCache, make_engine,
-                      shard_index)
+from .procdriver import ProcessExecutor, ProcessShardedCache, ShmArena
+from .sharded import (DemandSummary, GlobalRebalancer, ShardDemandTracker,
+                      ShardRouting, ShardedIGTCache, make_engine,
+                      shard_index, split_capacity)
 from .types import (AccessRecord, CacheConfig, CacheStats, GB, MB, PathT,
                     Pattern, block_key, split_block_key)
 
 __all__ = [
     "AccessRecord", "AccessStream", "AccessStreamTree", "BUNDLES",
     "BackingStore", "CacheClient", "CacheConfig", "CacheManageUnit",
-    "CacheStats", "EngineOptions", "ExecutorStats", "GB",
+    "CacheStats", "DemandSummary", "EngineOptions", "ExecutorStats", "GB",
     "GlobalRebalancer", "IGTCache", "KernelGuard", "LevelCache", "MB",
     "NullExecutor", "ObservedChain",
-    "PathT", "Pattern", "PatternResult", "PrefetchExecutor", "ReadOutcome",
-    "ReadResult", "ShardedIGTCache", "SimExecutor", "ThreadedExecutor",
+    "PathT", "Pattern", "PatternResult", "PrefetchExecutor",
+    "ProcessExecutor", "ProcessShardedCache", "ReadOutcome",
+    "ReadResult", "ShardDemandTracker", "ShardRouting", "ShardedIGTCache",
+    "ShmArena", "SimExecutor", "ThreadedExecutor",
     "UnifiedCache", "analyze_streams", "block_key", "bundle",
     "bundle_client", "bundle_engine", "classify",
     "classify_batch", "detect_sequential", "fit_adaptive_ttl",
     "fit_adaptive_ttl_batch", "informative_depth", "ks_critical",
     "ks_test_random", "make_engine", "open_cache", "path_key",
-    "shard_index", "split_block_key", "triangular_cdf",
+    "shard_index", "split_block_key", "split_capacity", "triangular_cdf",
 ]

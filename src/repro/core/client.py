@@ -131,9 +131,11 @@ class KernelGuard:
 
     def __init__(self, engine: Engine) -> None:
         self.engine = engine
-        n = engine.n_shards if isinstance(engine, ShardedIGTCache) else 1
+        # duck-typed: any sharded driver (in-process facade or the
+        # multi-process ProcessShardedCache) exposes n_shards + shard_id
+        n = getattr(engine, "n_shards", 1)
         self._locks = [threading.Lock() for _ in range(n)]
-        self._sharded = isinstance(engine, ShardedIGTCache)
+        self._sharded = n > 1
 
     @property
     def n_shards(self) -> int:
@@ -407,6 +409,7 @@ class ThreadedExecutor(PrefetchExecutor):
         self._workers: List[threading.Thread] = []
         self._stop = threading.Event()
         self._started = False
+        self._closed = False
 
     # -- lifecycle ----------------------------------------------------------
     def attach(self, engine: Engine, backing, guard: KernelGuard,
@@ -424,6 +427,7 @@ class ThreadedExecutor(PrefetchExecutor):
             w.start()
 
     def close(self, cancel_pending: bool = True) -> None:
+        self._closed = True             # submit() now raises, not enqueues
         if not self._started or self._stop.is_set():
             return
         if not cancel_pending:
@@ -464,6 +468,19 @@ class ThreadedExecutor(PrefetchExecutor):
         if not candidates:
             return
         guard = self.guard
+        if self._closed:
+            # close-vs-submit race: the queues are dead, so first release
+            # every candidate on the kernel (the pending table must never
+            # leak), then fail loudly — a silent cancel here would let a
+            # caller keep feeding a closed executor forever
+            with self._stats_lock:
+                self.stats.submitted += len(candidates)
+            for path, _size in candidates:
+                with guard.lock_for(path):
+                    self.engine.cancel_prefetch(path)
+                with self._stats_lock:
+                    self.stats.cancelled += 1
+            raise RuntimeError("submit() on a closed ThreadedExecutor")
         with self._stats_lock:
             self.stats.submitted += len(candidates)
         for path, size in candidates:
@@ -651,6 +668,9 @@ class CacheClient:
         if fetch_bytes and self.backing is None:
             raise ValueError("fetch_bytes=True needs a backing store")
         self._closed = False
+        # open_cache sets this: a client that *constructed* its engine
+        # also shuts it down (process-backed drivers own OS resources)
+        self._own_engine = False
 
     # ------------------------------------------------------------------ read
     def read(self, file_path: PathT, offset: int, size: int,
@@ -856,11 +876,18 @@ class CacheClient:
 
     def close(self, cancel_pending: bool = True) -> None:
         """Shut the executor down (cancelling queued candidates on the
-        kernel).  The kernel itself carries no OS resources to release."""
+        kernel), then — when this client constructed its engine
+        (``open_cache``) — the engine itself.  In-process kernels carry
+        no OS resources; the multi-process driver joins its workers and
+        releases the shared-memory arena."""
         if self._closed:
             return
         self._closed = True
         self.executor.close(cancel_pending=cancel_pending)
+        if self._own_engine:
+            engine_close = getattr(self.engine, "close", None)
+            if engine_close is not None:
+                engine_close()
 
     def __enter__(self) -> "CacheClient":
         return self
@@ -869,18 +896,17 @@ class CacheClient:
         self.close()
 
 
-_EXECUTORS = {
-    "sim": SimExecutor,
-    "threaded": ThreadedExecutor,
-    "none": NullExecutor,
-}
+_EXECUTORS = ("sim", "threaded", "none", "process")
 
 
 def open_cache(store, capacity: int, *,
                cfg: Optional[CacheConfig] = None,
                options: Optional[EngineOptions] = None,
                n_shards: int = 1,
-               executor: Union[str, PrefetchExecutor] = "sim",
+               driver: str = "thread",
+               n_procs: Optional[int] = None,
+               arena_bytes: Optional[int] = None,
+               executor: Optional[Union[str, PrefetchExecutor]] = None,
                backing=None,
                clock: Optional[Callable[[], float]] = None,
                fetch_bytes: bool = False,
@@ -896,33 +922,78 @@ def open_cache(store, capacity: int, *,
     ``storage.api.open_store``).  It doubles as the kernel's
     ``StoreMeta`` and (unless ``backing`` overrides it) the client's
     backing store; legacy one-method ``fetch_block`` stores are adapted
-    automatically.  ``executor`` picks the prefetch transport: ``"sim"``
-    (deterministic inline, virtual-clock callers), ``"threaded"``
-    (per-shard background workers, wall-clock callers), ``"none"``
-    (read-only: candidates cancelled), or a pre-built
-    :class:`PrefetchExecutor` instance.  ``retry`` is the
+    automatically.
+
+    ``driver`` selects where the shard kernels run:
+
+    * ``"thread"`` (default) — in this process (``make_engine``:
+      the plain ``IGTCache`` at ``n_shards=1``, the ``ShardedIGTCache``
+      facade otherwise);
+    * ``"process"`` — one worker process per shard
+      (``core.procdriver.ProcessShardedCache``), ``n_procs`` of them
+      (defaults to ``n_shards`` when that is > 1, else 2), with fetched
+      bytes crossing through a shared-memory arena of ``arena_bytes``.
+
+    ``executor`` picks the prefetch transport: ``"sim"`` (deterministic
+    inline, virtual-clock callers), ``"threaded"`` (per-shard background
+    workers, wall-clock callers), ``"none"`` (read-only: candidates
+    cancelled), ``"process"`` (worker-resident fetch+complete — requires
+    ``driver="process"``), or a pre-built :class:`PrefetchExecutor`
+    instance.  When omitted it follows the driver: ``"sim"`` in-process,
+    ``"process"`` for the process driver.  ``retry`` is the
     ``storage.api.RetryPolicy`` guarding every byte fetch.
     """
     if isinstance(store, str):
         from ..storage.api import open_store
         store = open_store(store)
-    engine = make_engine(store, capacity, cfg=cfg, options=options,
-                         n_shards=n_shards)
+    if driver not in ("thread", "process"):
+        raise ValueError(f"unknown driver {driver!r}; expected 'thread' "
+                         f"or 'process'")
+    if executor is None:
+        executor = "process" if driver == "process" else "sim"
+    if isinstance(executor, str) and executor not in _EXECUTORS:
+        # validate BEFORE constructing the engine: a process-backed
+        # engine spawns workers that must not leak over a typo
+        raise ValueError(
+            f"unknown executor {executor!r}; expected one of "
+            f"{sorted(_EXECUTORS)} or a PrefetchExecutor instance")
+    if driver == "process":
+        from .procdriver import DEFAULT_ARENA_BYTES, ProcessShardedCache
+        if n_procs is None:
+            n_procs = n_shards if n_shards > 1 else 2
+        engine: Engine = ProcessShardedCache(
+            store, capacity, cfg=cfg, options=options, n_procs=n_procs,
+            arena_bytes=(DEFAULT_ARENA_BYTES if arena_bytes is None
+                         else arena_bytes),
+            backing=backing,     # workers serve demand misses from it
+            retry=retry)
+    else:
+        if n_procs is not None:
+            raise ValueError("n_procs only applies to driver='process'")
+        engine = make_engine(store, capacity, cfg=cfg, options=options,
+                             n_shards=n_shards)
     if backing is None:
         backing = store          # normalized (or rejected) by CacheClient
     if isinstance(executor, str):
-        try:
-            kind = _EXECUTORS[executor]
-        except KeyError:
-            raise ValueError(
-                f"unknown executor {executor!r}; expected one of "
-                f"{sorted(_EXECUTORS)} or a PrefetchExecutor instance")
-        if kind is ThreadedExecutor:
+        if executor == "threaded":
             executor = ThreadedExecutor(queue_depth=queue_depth,
                                         max_fetch_bytes=max_fetch_bytes)
-        elif kind is SimExecutor:
+        elif executor == "process":
+            from .procdriver import ProcessExecutor
+            executor = ProcessExecutor(queue_depth=queue_depth,
+                                       max_fetch_bytes=max_fetch_bytes)
+        elif executor == "sim":
             executor = SimExecutor()
         else:
             executor = NullExecutor()
-    return CacheClient(engine, backing=backing, executor=executor,
-                       clock=clock, fetch_bytes=fetch_bytes, retry=retry)
+    try:
+        client = CacheClient(engine, backing=backing, executor=executor,
+                             clock=clock, fetch_bytes=fetch_bytes,
+                             retry=retry)
+    except BaseException:
+        engine_close = getattr(engine, "close", None)
+        if engine_close is not None:     # never leak worker processes
+            engine_close()
+        raise
+    client._own_engine = True
+    return client

@@ -28,6 +28,7 @@ capacity, every call forwards to it, and the global layer stays inert.
 from __future__ import annotations
 
 import zlib
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .allocation import DemandEstimate, Rebalancer, marginal_benefit
@@ -48,6 +49,80 @@ def shard_index(path: PathT, n_shards: int) -> int:
         return 0
     top = path[0] if path else ""
     return zlib.crc32(top.encode("utf-8")) % n_shards
+
+
+class ShardRouting:
+    """Memoized path → shard routing, shared by every shard driver.
+
+    The CRC-32 of the top-level component is computed **once per
+    dataset**: routing for every subsequent access of that dataset is a
+    single dict lookup (datasets are few; the memo is unbounded by
+    design).  Both the in-process ``ShardedIGTCache`` facade and the
+    multi-process ``core.procdriver.ProcessShardedCache`` inherit this,
+    so the two drivers cannot drift on placement — a path routes to the
+    same shard index under either."""
+
+    def _init_routing(self, n_shards: int) -> None:
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        # top-level component -> shard id (memoized CRC-32)
+        self._route: Dict[str, int] = {}
+
+    def shard_id(self, path: PathT) -> int:
+        if self.n_shards == 1:
+            return 0
+        top = path[0] if path else ""
+        sid = self._route.get(top)
+        if sid is None:
+            sid = shard_index(path, self.n_shards)
+            self._route[top] = sid
+        return sid
+
+    def bucket_by_shard(self, items: Sequence,
+                        path_of=None) -> Dict[int, List[tuple]]:
+        """Group indexed items by owning shard:
+        ``{sid: [(original_index, item), ...]}`` — the one split-and-
+        reassemble-in-order primitive every batched fan-out uses (both
+        drivers' ``read_batch``, both executors' ``fetch_demand``), so
+        ordering/empty-bucket edge cases cannot drift between copies.
+        ``path_of`` extracts the routing path (default: ``item[0]``,
+        the shape of read requests and range requests)."""
+        buckets: Dict[int, List[tuple]] = {}
+        if path_of is None:
+            for i, item in enumerate(items):
+                buckets.setdefault(self.shard_id(item[0]), []).append(
+                    (i, item))
+        else:
+            for i, item in enumerate(items):
+                buckets.setdefault(self.shard_id(path_of(item)), []).append(
+                    (i, item))
+        return buckets
+
+
+@dataclass
+class DemandSummary:
+    """One CMU's demand estimate, serialized for the cross-shard
+    allocation round.
+
+    This is the wire format of the rebalance-summary protocol: worker
+    processes ship these rows to the driver instead of live
+    ``CacheManageUnit`` objects, and the in-process facade builds the
+    same rows from its shards, so both drivers run the identical greedy
+    rule (``GlobalRebalancer.plan_moves``).  ``demand_limit`` carries
+    enough state to re-evaluate ``wants_more`` after a mid-round quota
+    move (RANDOM streams stop wanting at ``dataset_bytes``); patterns
+    whose demand does not depend on quota leave it ``None``.
+    """
+
+    shard: int                 # owning shard index
+    key: PathT                 # CMU root path (unique within its shard)
+    benefit: float             # marginal benefit B (quota-independent)
+    wants_more: bool           # unmet demand at current quota
+    can_take: bool             # workload CMU; shard defaults only donate
+    quota: int
+    headroom: int              # quota - min_share (donatable bytes)
+    demand_limit: Optional[float] = None   # wants_more := quota < limit
 
 
 class GlobalRebalancer(Rebalancer):
@@ -74,10 +149,104 @@ class GlobalRebalancer(Rebalancer):
 
     def __init__(self, cfg: CacheConfig) -> None:
         super().__init__(cfg)
+        self.tracker = ShardDemandTracker(cfg)
+
+    def _estimate(self, cmu: CacheManageUnit, now: float) -> DemandEstimate:
+        return self.tracker.estimate(cmu, now)
+
+    def plan_moves(self, rows: Sequence[DemandSummary],
+                   max_moves: Optional[int] = None
+                   ) -> List[Tuple[DemandSummary, DemandSummary, int]]:
+        """The paper's greedy max-B ← min-B rule over serialized demand
+        rows — pure planning, no engine access.  Both drivers run this:
+        the in-process facade applies the returned moves to live CMUs,
+        the process driver ships them to workers as quota/capacity
+        deltas.  Rows are mutated in place (quota, headroom,
+        ``wants_more`` via ``demand_limit``) so successive moves see the
+        post-move state, exactly like the live-object round did."""
+        moves: List[Tuple[DemandSummary, DemandSummary, int]] = []
+        if not rows or len({r.shard for r in rows}) < 2:
+            return moves
+        if max_moves is None:
+            max_moves = len(rows)
+        quantum = self.cfg.rebalance_quantum
+        for _ in range(max_moves):
+            takers = [r for r in rows if r.can_take and r.wants_more]
+            if not takers:
+                break
+            taker = max(takers, key=lambda r: r.benefit)
+            # donors restricted to OTHER shards: co-located pairs are the
+            # shard-local rebalancer's job
+            donors = [r for r in rows
+                      if r.headroom >= quantum and r.shard != taker.shard]
+            if not donors:
+                break
+            donor = min(donors, key=lambda r: r.benefit)
+            if not self.clears_hysteresis(donor.benefit, taker.benefit):
+                break
+            amt = min(quantum, donor.headroom)
+            if amt <= 0:
+                break
+            for row, delta in ((donor, -amt), (taker, amt)):
+                row.quota += delta
+                row.headroom += delta
+                if row.demand_limit is not None:
+                    row.wants_more = row.quota < row.demand_limit
+            moves.append((donor, taker, amt))
+        return moves
+
+    def rebalance_shards(self, shards: Sequence[IGTCache], now: float,
+                         max_moves: Optional[int] = None) -> List[tuple]:
+        """In-process round: summarize each shard (the same rows a worker
+        would ship), plan with the shared greedy rule, apply to the live
+        engines.  A cross-shard move shifts CMU quota and backing pool
+        capacity together, so total capacity is conserved and every
+        shard keeps ``sum(quota) == capacity``."""
+        self.last_round = now
+        rows: List[DemandSummary] = []
+        live: List[CacheManageUnit] = []     # rows[i] describes live[i]
+        owner: List[IGTCache] = []
+        for sid, eng in enumerate(shards):
+            for row, cmu in self.tracker.summarize(eng, sid, now,
+                                                   mark=False):
+                rows.append(row)
+                live.append(cmu)
+                owner.append(eng)
+        self.tracker.mark_all(live)
+        index = {id(r): i for i, r in enumerate(rows)}
+        moves: List[tuple] = []
+        if len(shards) < 2:
+            return moves
+        for d_row, t_row, amt in self.plan_moves(rows, max_moves):
+            donor, taker = live[index[id(d_row)]], live[index[id(t_row)]]
+            d_eng, t_eng = owner[index[id(d_row)]], owner[index[id(t_row)]]
+            donor.set_quota(donor.quota - amt)
+            d_eng.cache.adjust_capacity(-amt)
+            t_eng.cache.adjust_capacity(amt)
+            taker.set_quota(taker.quota + amt)
+            moves.append((donor, taker, amt))
+        return moves
+
+
+class ShardDemandTracker:
+    """Per-shard demand summarization for the cross-shard round.
+
+    Lives next to the engine it measures: in-process the facade's
+    ``GlobalRebalancer`` holds one for all shards; under the process
+    driver each worker holds its own and ships the rows over the pipe
+    (the ``rebalance_summary`` command).  SKEWED demand is measured from
+    the BufferWindows' *cumulative* counters as deltas over this
+    tracker's own round interval — shard-local rounds reset the
+    per-round counters on their own read-triggered phase, so the
+    cumulative delta is the only phase-independent signal (see
+    ``allocation.BufferWindow``)."""
+
+    def __init__(self, cfg: CacheConfig) -> None:
+        self.cfg = cfg
         # cmu -> (total_hits, total_probes) at the end of our last round
         self._ghost_mark: Dict[CacheManageUnit, Tuple[int, int]] = {}
 
-    def _estimate(self, cmu: CacheManageUnit, now: float) -> DemandEstimate:
+    def estimate(self, cmu: CacheManageUnit, now: float) -> DemandEstimate:
         est = marginal_benefit(cmu, now, self.cfg)
         if cmu.effective_pattern() is Pattern.SKEWED:
             bw = cmu.buffer_window
@@ -88,65 +257,62 @@ class GlobalRebalancer(Rebalancer):
                                  dh > 0, est.can_shrink)
         return est
 
-    def rebalance_shards(self, shards: Sequence[IGTCache], now: float,
-                         max_moves: Optional[int] = None) -> List[tuple]:
-        self.last_round = now
-        owner: Dict[CacheManageUnit, IGTCache] = {}
-        takers_pool: List[CacheManageUnit] = []
-        donors_pool: List[CacheManageUnit] = []
-        for eng in shards:
-            for c in eng.workload_cmus():
-                owner[c] = eng
-                takers_pool.append(c)
-                donors_pool.append(c)
-            # A shard's *default* CMU donates cross-shard too (never takes):
-            # otherwise a shard whose datasets happen to be all-sequential —
-            # or that drew no dataset at all — holds 1/N of the cluster
-            # capacity hostage.  Mirrors the shard-local round, which also
-            # passes the default CMU to the rebalancer as a donor.
-            d = eng.cache.default_cmu
-            owner[d] = eng
-            donors_pool.append(d)
-        moves: List[tuple] = []
-        if not takers_pool or len(shards) < 2:
-            self._mark_ghosts(donors_pool)
-            return moves
-        if max_moves is None:
-            max_moves = len(donors_pool)
-        est = {c: self._estimate(c, now) for c in donors_pool}
-        for _ in range(max_moves):
-            takers = [c for c in takers_pool if est[c].wants_more]
-            if not takers:
-                break
-            taker = max(takers, key=lambda c: est[c].benefit)
-            # donors restricted to OTHER shards: co-located pairs are the
-            # shard-local rebalancer's job
-            donors = [c for c in donors_pool
-                      if est[c].can_shrink and owner[c] is not owner[taker]]
-            got = self.pick_move(est, donors, [taker])
-            if got is None:
-                break
-            donor, taker, amt = got
-            d_eng, t_eng = owner[donor], owner[taker]
-            donor.set_quota(donor.quota - amt)
-            d_eng.cache.adjust_capacity(-amt)
-            t_eng.cache.adjust_capacity(amt)
-            taker.set_quota(taker.quota + amt)
-            moves.append((donor, taker, amt))
-            est[donor] = self._estimate(donor, now)
-            est[taker] = self._estimate(taker, now)
-        self._mark_ghosts(donors_pool)
-        return moves
+    def _row(self, cmu: CacheManageUnit, sid: int, now: float,
+             can_take: bool) -> DemandSummary:
+        est = self.estimate(cmu, now)
+        limit: Optional[float] = None
+        pat = cmu.effective_pattern()
+        if pat is Pattern.RANDOM:
+            limit = float(cmu.dataset_bytes)
+        elif pat is Pattern.UNKNOWN and can_take:
+            # wants_more was `used >= 0.95 * quota` — express as a quota
+            # threshold so mid-round moves re-evaluate it
+            limit = cmu.used / 0.95 if cmu.used else 0.0
+        return DemandSummary(
+            shard=sid, key=cmu.root_path, benefit=est.benefit,
+            wants_more=est.wants_more, can_take=can_take, quota=cmu.quota,
+            headroom=cmu.quota - self.cfg.min_share, demand_limit=limit)
 
-    def _mark_ghosts(self, cmus: Sequence[CacheManageUnit]) -> None:
+    def summarize(self, eng: IGTCache, sid: int, now: float,
+                  mark: bool = True
+                  ) -> List[Tuple[DemandSummary, CacheManageUnit]]:
+        """Demand rows for one shard.
+
+        The shard's *default* CMU is included as a donor-only row
+        (``can_take=False``): a shard whose datasets happen to be
+        all-sequential — or that drew no dataset at all — must not hold
+        1/N of the cluster capacity hostage.  Mirrors the shard-local
+        round, which also passes the default CMU as a donor.
+
+        ``mark=True`` (the single-shard / worker-resident case) advances
+        the ghost marks to now; a tracker measuring several shards must
+        pass ``mark=False`` per shard and call :meth:`mark_all` once
+        with every shard's CMUs — replacing the dict per shard would
+        wipe the other shards' marks."""
+        pairs: List[Tuple[DemandSummary, CacheManageUnit]] = []
+        for c in eng.workload_cmus():
+            pairs.append((self._row(c, sid, now, can_take=True), c))
+        d = eng.cache.default_cmu
+        pairs.append((self._row(d, sid, now, can_take=False), d))
+        if mark:
+            self.mark_all(c for _, c in pairs)
+        return pairs
+
+    def mark_all(self, cmus) -> None:
         """Start the next measurement interval at the current cumulative
-        ghost counters (dropping marks of TTL-removed CMUs)."""
+        ghost counters (marks of TTL-removed CMUs are dropped)."""
         self._ghost_mark = {
             c: (c.buffer_window.total_hits, c.buffer_window.total_probes)
             for c in cmus}
 
 
-class ShardedIGTCache:
+def split_capacity(capacity: int, n_shards: int) -> List[int]:
+    """Initial per-shard capacity partition (both drivers use this)."""
+    base, rem = divmod(capacity, n_shards)
+    return [base + (1 if i < rem else 0) for i in range(n_shards)]
+
+
+class ShardedIGTCache(ShardRouting):
     """N path-hash ``IGTCache`` shards behind the engine's public API.
 
     Exactly the surface callers use — ``read``, ``read_batch``,
@@ -160,34 +326,18 @@ class ShardedIGTCache:
                  cfg: Optional[CacheConfig] = None,
                  options: Optional[EngineOptions] = None,
                  n_shards: int = 1) -> None:
-        if n_shards < 1:
-            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self._init_routing(n_shards)
         self.meta = meta
         self.cfg = cfg or CacheConfig()
         self.options = options or EngineOptions()
-        self.n_shards = n_shards
         self.capacity = capacity
-        base, rem = divmod(capacity, n_shards)
         self.shards: List[IGTCache] = [
-            IGTCache(meta, base + (1 if i < rem else 0), cfg=self.cfg,
-                     options=self.options)
-            for i in range(n_shards)
+            IGTCache(meta, cap, cfg=self.cfg, options=self.options)
+            for cap in split_capacity(capacity, n_shards)
         ]
         self.global_rebalancer = GlobalRebalancer(self.cfg)
-        # top-level component -> shard id (datasets are few; unbounded is fine)
-        self._route: Dict[str, int] = {}
 
     # ------------------------------------------------------------- routing
-    def shard_id(self, path: PathT) -> int:
-        if self.n_shards == 1:
-            return 0
-        top = path[0] if path else ""
-        sid = self._route.get(top)
-        if sid is None:
-            sid = shard_index(path, self.n_shards)
-            self._route[top] = sid
-        return sid
-
     def shard_for(self, path: PathT) -> IGTCache:
         return self.shards[self.shard_id(path)]
 
@@ -221,9 +371,7 @@ class ShardedIGTCache:
         and reassemble outcomes in the original request order."""
         if self.n_shards == 1:
             return self.shards[0].read_batch(requests, now)
-        buckets: Dict[int, List[Tuple[int, Tuple[PathT, int, int]]]] = {}
-        for i, req in enumerate(requests):
-            buckets.setdefault(self.shard_id(req[0]), []).append((i, req))
+        buckets = self.bucket_by_shard(requests)
         outs: List[Optional[ReadOutcome]] = [None] * len(requests)
         for sid, items in buckets.items():
             got = self.shards[sid].read_batch([r for _, r in items], now)

@@ -50,6 +50,7 @@ __all__ = [
     "RangeRequest", "RetryPolicy", "StoreCapabilities", "StoreError",
     "StoreMetaIndex", "TransientStoreError", "as_backing_store",
     "open_store", "register_scheme", "registered_schemes",
+    "resolve_store_spec", "store_spec",
 ]
 
 # One demand fetch: (file-or-block path, offset within it, length).
@@ -390,6 +391,18 @@ class FaultyStore(BackingStore):
     def capabilities(self) -> StoreCapabilities:
         return self._backing.capabilities()
 
+    def __getstate__(self):
+        # picklable for spawn/forkserver shard workers (the lock is
+        # process-local state; each process draws from its own copy of
+        # the seeded RNG stream)
+        state = self.__dict__.copy()
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
     def _roll(self, what: str) -> None:
         # concurrent shard workers + readers all fetch through here —
         # draw and count under one lock so the injection counters stay
@@ -505,7 +518,55 @@ def open_store(uri: str, **overrides):
     if factory is None:
         raise ValueError(f"unknown store scheme {url.scheme!r}; registered: "
                          f"{registered_schemes()}")
-    return factory(url, **params)
+    store = factory(url, **params)
+    _record_uri(store, uri)
+    return store
+
+
+def _record_uri(store, uri: str) -> None:
+    """Best-effort provenance stamp: a URI-opened store remembers its URI
+    so it can be *re-opened in another process* (``store_spec``).  Stores
+    with ``__slots__``/immutable instances simply stay unstamped."""
+    try:
+        store.uri = uri
+    except (AttributeError, TypeError):  # pragma: no cover - exotic stores
+        pass
+
+
+def store_spec(store):
+    """Picklable recipe to reconstruct ``store`` in a worker process.
+
+    The multi-process shard driver gives every worker its own store
+    instance (per-process file handles / connections, per-process
+    capability negotiation) instead of sharing one across the fork:
+
+    * a URI string travels as ``("uri", uri)`` — the worker calls
+      ``open_store`` afresh, re-negotiating capabilities against its own
+      instance; a store *object* does so only when its class opts in
+      with ``reopen_by_uri = True`` (``LocalFSStore``: the whole state
+      derives from the walked directory, so a re-open is faithful —
+      unlike e.g. a ``RemoteStore`` whose datasets were registered after
+      opening, which must travel as the object itself);
+    * anything else travels as ``("object", store)`` — verbatim under a
+      ``fork`` start method (the child inherits the parent's heap), by
+      pickle under ``spawn`` (the store must then be picklable).
+    """
+    if isinstance(store, str):
+        return ("uri", store)
+    uri = getattr(store, "uri", None)
+    if isinstance(uri, str) and getattr(store, "reopen_by_uri", False):
+        return ("uri", uri)
+    return ("object", store)
+
+
+def resolve_store_spec(spec, **overrides):
+    """Worker-side inverse of :func:`store_spec`."""
+    kind, payload = spec
+    if kind == "uri":
+        return open_store(payload, **overrides)
+    if kind == "object":
+        return payload
+    raise ValueError(f"unknown store spec kind {kind!r}")
 
 
 def _mem_factory(url, **params):

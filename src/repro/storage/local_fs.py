@@ -31,6 +31,11 @@ class LocalFSStore(StoreMetaIndex, BackingStore):
     """Directory-tree store: sorted-listing metadata snapshot + ranged
     reads of the underlying files."""
 
+    # the whole store state derives from the walked directory, so a
+    # worker process can faithfully reconstruct it from the URI alone
+    # (storage.api.store_spec → per-process re-open + re-negotiation)
+    reopen_by_uri = True
+
     def __init__(self, root: str, block_size: int = 4 * MB) -> None:
         super().__init__()
         self.root = os.path.realpath(root)

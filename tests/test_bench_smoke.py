@@ -26,6 +26,16 @@ def test_overhead_smoke_emits_json(tmp_path):
         point = payload["sharded"][n]
         assert point["us_per_access"] > 0
         assert point["nodes"] > 0
+    # multi-process driver axis (merged section, --procs 1,2,4): the
+    # kernel loop and the in-process facade ride along for the
+    # interleaved comparison.  Smoke asserts presence, not ordering —
+    # the down-scaled run is too short for a meaningful race.
+    axis = payload["proc_path"]
+    assert axis["smoke"] is True
+    for key in ("kernel_1", "facade_4", "proc_1", "proc_2", "proc_4"):
+        assert axis[key]["us_per_access"] > 0
+    assert "speedup_4p_vs_1p" in axis
+    assert "speedup_4p_vs_kernel" in axis
 
 
 def test_store_micro_smoke(tmp_path):

@@ -153,7 +153,11 @@ def test_open_cache_rejects_unknown_executor():
         open_cache(store, 64 * MB, cfg=CFG, executor="warp-drive")
 
 
-def test_submit_after_close_cancels_not_leaks():
+def test_submit_after_close_raises_and_releases():
+    """Close-vs-submit race (ISSUE 5 satellite): a submit that loses the
+    race against close() must raise cleanly instead of enqueueing into a
+    dead queue — but only after releasing every candidate on the kernel
+    (the pending table must not leak just because the caller was late)."""
     store = mk_store()
     engine = IGTCache(store, 128 * MB, cfg=CFG)
     ex = ThreadedExecutor(queue_depth=64)
@@ -161,8 +165,10 @@ def test_submit_after_close_cancels_not_leaks():
     cands = seq_candidates(store, engine, n=8)
     client.close()
     before = ex.stats.cancelled
-    ex.submit(cands, 1.0)   # late offer: queues are closed → cancel path
+    with pytest.raises(RuntimeError):
+        ex.submit(cands, 1.0)   # late offer: executor is closed
     assert ex.stats.cancelled >= before + len(cands)
+    assert executor_identity(ex.stats) == ex.stats.submitted
     issued = {path_key(p) for p, _ in cands}
     assert not (engine._pending_prefetch & issued)
 

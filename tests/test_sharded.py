@@ -47,6 +47,27 @@ def test_same_path_same_shard_always():
             assert a.shard_id(f.path + ("#0",)) == sid
 
 
+def test_routing_hashes_once_per_dataset(monkeypatch):
+    """Memoized routing (ISSUE 5 satellite): the CRC-32 runs once per
+    top-level component, not once per access — every later access is a
+    dict lookup on both drivers (ShardRouting mixin)."""
+    import repro.core.sharded as sh
+    calls = []
+    real = sh.zlib.crc32
+    monkeypatch.setattr(sh.zlib, "crc32",
+                        lambda data: calls.append(data) or real(data))
+    store = mk_store()
+    eng = ShardedIGTCache(store, 64 * MB, cfg=CFG, n_shards=4)
+    t = 0.0
+    for _ in range(3):
+        for ds in store.datasets.values():
+            for f in ds.files[:8]:
+                eng.read(f.path, 0, f.size, t)
+                t += 0.01
+    assert len(calls) <= len(store.datasets), \
+        f"CRC-32 ran {len(calls)}× for {len(store.datasets)} datasets"
+
+
 def test_routing_only_uses_top_level_component():
     """A dataset never straddles shards: every stream (directory, file,
     block level) observes exactly its unsharded access sequence."""

@@ -1,0 +1,183 @@
+"""Availability micro-benchmark (the ``fault_path`` axis).
+
+The fault-tolerant runtime claims three things a number can check:
+
+1. **Recovery time** — a SIGKILLed shard worker is respawned by the
+   supervisor with its store re-opened and kernel rebuilt cold; the
+   respawn event records ``recovery_s`` from death detection to the
+   shard serving again.
+2. **Degraded-read cost** — while the shard is down, its reads bypass
+   the kernel and fetch straight from the backing store.  Bytes always
+   arrive; the question is what the detour costs per batch relative to
+   the fault-free path.
+3. **Post-recovery CHR convergence** — the respawned kernel starts cold
+   but observes the same access stream; over a trailing window its CHR
+   must converge back toward the fault-free run's (the chaos e2e test
+   asserts the 5 % bound; here the gap is *recorded* into the perf
+   trajectory).
+
+Protocol: two runs of the same seeded trace against the multi-process
+driver (2 workers) — fault-free baseline, then a chaos run with one
+worker killed a third of the way in (``sim.chaos.ChaosMonkey``).  Both
+runs step through identical ``read_batch`` calls with byte fetches on.
+Results merge into ``BENCH_overhead.json`` under ``fault_path``
+(``--smoke`` → ``BENCH_overhead_smoke.json``; exercised by
+tests/test_bench_smoke.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+# .common bootstraps sys.path with REPO_ROOT/src — must import before repro
+from .common import csv_row, merge_overhead_section
+
+from repro.core import CacheConfig, open_cache
+from repro.core.types import MB
+from repro.sim.chaos import ChaosMonkey
+from repro.storage import RemoteStore, make_dataset
+
+
+def _world(n_datasets: int, files_per_dir: int):
+    """Distinct top-level datasets so the key space spreads across both
+    shard workers (routing hashes the top-level path component)."""
+    store = RemoteStore()
+    for i in range(n_datasets):
+        store.add(make_dataset(f"job{i}", "dir_tree", n_dirs=4,
+                               files_per_dir=files_per_dir,
+                               small_file_size=256 * 1024))
+    return store
+
+
+def _trace(store, n_steps: int, batch: int, seed: int):
+    files = [f for ds in store.datasets.values() for f in ds.files]
+    rng = np.random.default_rng(seed)
+    steps = []
+    for _ in range(n_steps):
+        picks = rng.integers(0, len(files), batch)
+        steps.append([(files[int(j)].path, 0, files[int(j)].size)
+                      for j in picks])
+    return steps
+
+
+def _open(store, cap, cfg):
+    return open_cache(store, cap, cfg=cfg, driver="process", n_procs=2,
+                      arena_bytes=32 * MB, fetch_bytes=True,
+                      rpc_timeout_s=10.0)
+
+
+def _chr_delta(snap0: dict, snap1: dict) -> float:
+    """Block-level CHR over the window between two stats snapshots."""
+    hits = snap1["hits"] - snap0["hits"]
+    total = hits + snap1["misses"] - snap0["misses"]
+    return hits / total if total else 0.0
+
+
+def _run(store, cap, cfg, steps, kill_step=None):
+    """Drive one seeded trace; optionally kill a worker at ``kill_step``.
+    Returns per-step latencies, windowed CHR samples, and fault/client
+    accounting."""
+    client = _open(store, cap, cfg)
+    lat = []
+    snaps = []
+    monkey = None
+    try:
+        for i, reqs in enumerate(steps):
+            if kill_step is not None and i == kill_step:
+                monkey = ChaosMonkey(client)
+                target = client.engine.shard_id(reqs[0][0])
+                monkey.kill(target, reason="fault_micro")
+            t0 = time.perf_counter()
+            client.read_batch(reqs)
+            lat.append(time.perf_counter() - t0)
+            snaps.append(client.stats.snapshot())
+        fault = client.fault_stats()
+        return {"lat": lat, "snaps": snaps, "fault": fault,
+                "client": client.client_stats.snapshot(),
+                "strikes": monkey.strikes if monkey else []}
+    finally:
+        if monkey is not None:
+            monkey.resume_all()
+        client.close()
+
+
+def main(smoke: bool = False, seed: int = 0, json_path=None):
+    n_steps = 24 if smoke else 120
+    batch = 8 if smoke else 16
+    n_datasets = 4
+    files_per_dir = 4 if smoke else 8
+    store = _world(n_datasets, files_per_dir)
+    cap = 96 * MB
+    cfg = CacheConfig(min_share=4 * MB, rebalance_quantum=4 * MB,
+                      window=40, reanalyze_every=20, node_cap=2000)
+    steps = _trace(store, n_steps, batch, seed)
+    kill_step = n_steps // 3
+    window = max(4, n_steps // 4)          # trailing convergence window
+
+    base = _run(store, cap, cfg, steps)
+    chaos = _run(store, cap, cfg, steps, kill_step=kill_step)
+
+    # recovery time straight from the supervisor's respawn event
+    respawns = [e for e in chaos["fault"]["events"] if e["kind"] == "respawn"]
+    recovery_s = respawns[0]["recovery_s"] if respawns else None
+
+    # degraded-read cost: the batch that hit the fault (killed worker →
+    # typed error → direct store fetches) vs the fault-free mean batch
+    base_us = float(np.mean(base["lat"])) * 1e6
+    degraded_us = chaos["lat"][kill_step] * 1e6
+
+    # post-recovery CHR over the trailing window, both runs
+    chr_base = _chr_delta(base["snaps"][-window], base["snaps"][-1])
+    chr_chaos = _chr_delta(chaos["snaps"][-window], chaos["snaps"][-1])
+    gap_pct = abs(chr_base - chr_chaos) * 100.0
+
+    section = {
+        "smoke": smoke, "n_steps": n_steps, "batch": batch,
+        "kill_step": kill_step, "window": window,
+        "baseline": {"us_per_batch": round(base_us, 1),
+                     "chr_final": round(base["snaps"][-1]["hits"] /
+                                        max(1, base["snaps"][-1]["hits"] +
+                                            base["snaps"][-1]["misses"]), 4),
+                     "chr_window": round(chr_base, 4)},
+        "chaos": {"degraded_batch_us": round(degraded_us, 1),
+                  "degraded_cost_x": round(degraded_us / max(base_us, 1e-9),
+                                           2),
+                  "chr_window": round(chr_chaos, 4),
+                  "degraded_reads": chaos["client"]["degraded_reads"],
+                  "degraded_bytes": chaos["client"]["degraded_bytes"],
+                  "restarts": chaos["fault"]["restarts"],
+                  "shard_states": {str(k): v["state"] for k, v in
+                                   chaos["fault"]["shards"].items()}},
+        "recovery_s": round(recovery_s, 4) if recovery_s is not None else None,
+        "chr_gap_pct": round(gap_pct, 2),
+        "converged_within_5pct": bool(gap_pct <= 5.0),
+    }
+
+    rows = [
+        csv_row("fault_path.recovery_s", section["recovery_s"],
+                f"restarts={section['chaos']['restarts']}"),
+        csv_row("fault_path.degraded_batch_us",
+                section["chaos"]["degraded_batch_us"],
+                f"baseline={section['baseline']['us_per_batch']} "
+                f"cost_x={section['chaos']['degraded_cost_x']}"),
+        csv_row("fault_path.degraded_reads",
+                section["chaos"]["degraded_reads"],
+                f"bytes={section['chaos']['degraded_bytes']}"),
+        csv_row("fault_path.chr_gap_pct", section["chr_gap_pct"],
+                f"base={section['baseline']['chr_window']} "
+                f"chaos={section['chaos']['chr_window']} "
+                f"within_5pct={section['converged_within_5pct']}"),
+    ]
+    merge_overhead_section("fault_path", section, json_path)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="down-scaled run for the test job")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seed=args.seed)

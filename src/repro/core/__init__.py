@@ -14,9 +14,11 @@ from .access_stream_tree import (AccessStream, AccessStreamTree,
                                  ObservedChain, analyze_streams)
 from .baselines import BUNDLES, bundle, bundle_client, bundle_engine
 from .cache import CacheManageUnit, UnifiedCache, path_key
-from .client import (BackingStore, CacheClient, ExecutorStats, KernelGuard,
-                     NullExecutor, PrefetchExecutor, ReadResult, SimExecutor,
-                     ThreadedExecutor, open_cache)
+from .client import (BackingStore, CacheClient, ClientStats, ExecutorStats,
+                     KernelGuard, NullExecutor, PrefetchExecutor, ReadResult,
+                     SimExecutor, ThreadedExecutor, open_cache)
+from .faults import (RestartBudget, SHARD_DOWN, SHARD_RESTARTING, SHARD_UP,
+                     ShardUnavailableError)
 from .igtcache import EngineOptions, IGTCache, ReadOutcome, informative_depth
 from .ks import ks_critical, ks_test_random, triangular_cdf
 from .meta import LevelCache
@@ -33,12 +35,15 @@ from .types import (AccessRecord, CacheConfig, CacheStats, GB, MB, PathT,
 __all__ = [
     "AccessRecord", "AccessStream", "AccessStreamTree", "BUNDLES",
     "BackingStore", "CacheClient", "CacheConfig", "CacheManageUnit",
-    "CacheStats", "DemandSummary", "EngineOptions", "ExecutorStats", "GB",
+    "CacheStats", "ClientStats", "DemandSummary", "EngineOptions",
+    "ExecutorStats", "GB",
     "GlobalRebalancer", "IGTCache", "KernelGuard", "LevelCache", "MB",
     "NullExecutor", "ObservedChain",
     "PathT", "Pattern", "PatternResult", "PrefetchExecutor",
     "ProcessExecutor", "ProcessShardedCache", "ReadOutcome",
-    "ReadResult", "ShardDemandTracker", "ShardRouting", "ShardedIGTCache",
+    "ReadResult", "RestartBudget", "SHARD_DOWN", "SHARD_RESTARTING",
+    "SHARD_UP", "ShardDemandTracker", "ShardRouting", "ShardUnavailableError",
+    "ShardedIGTCache",
     "ShmArena", "SimExecutor", "ThreadedExecutor",
     "UnifiedCache", "analyze_streams", "block_key", "bundle",
     "bundle_client", "bundle_engine", "classify",

@@ -67,14 +67,15 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
 import numpy as np
 
 from .cache import path_key
-from .igtcache import EngineOptions, ReadOutcome
+from .faults import SHARD_UP, ShardUnavailableError
+from .igtcache import BlockResult, EngineOptions, ReadOutcome
 from .sharded import Engine, ShardedIGTCache, make_engine
 from .types import CacheConfig, PathT, block_key
 
 __all__ = [
-    "BackingStore", "CacheClient", "ExecutorStats", "KernelGuard",
-    "NullExecutor", "PrefetchExecutor", "ReadResult", "SimExecutor",
-    "ThreadedExecutor", "open_cache",
+    "BackingStore", "CacheClient", "ClientStats", "ExecutorStats",
+    "KernelGuard", "NullExecutor", "PrefetchExecutor", "ReadResult",
+    "SimExecutor", "ThreadedExecutor", "open_cache",
 ]
 
 # One demand fetch: (file-or-block path, offset within it, length) — the
@@ -117,6 +118,27 @@ class ExecutorStats:
                 "cancelled": self.cancelled, "deduped": self.deduped,
                 "demand_fetches": self.demand_fetches,
                 "retries": self.retries, "fetch_errors": self.fetch_errors}
+
+
+@dataclass
+class ClientStats:
+    """Degraded-path accounting for one :class:`CacheClient`.
+
+    Counts reads the client served *around* the kernel while a shard was
+    down/restarting (bytes came straight from the backing store, no
+    cache observation happened) — the availability cost a fault leaves
+    behind.  ``fallback_fetches`` counts demand fetches that started on
+    the executor and finished on the store after the shard died between
+    the kernel read and the byte fetch."""
+
+    degraded_reads: int = 0       # read requests served without the kernel
+    degraded_bytes: int = 0       # bytes fetched via the degraded path
+    fallback_fetches: int = 0     # executor demand fetches re-run direct
+
+    def snapshot(self) -> dict:
+        return {"degraded_reads": self.degraded_reads,
+                "degraded_bytes": self.degraded_bytes,
+                "fallback_fetches": self.fallback_fetches}
 
 
 class KernelGuard:
@@ -375,6 +397,11 @@ class _ShardQueue:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self.cv:
             while self.outstanding > 0 or self.demand:
+                if self.closed:
+                    # a closed queue can only drain via close()'s own
+                    # cancellation sweep — report the truth promptly
+                    # instead of burning the caller's full timeout
+                    return False
                 rem = None if deadline is None else deadline - time.monotonic()
                 if rem is not None and rem <= 0:
                     return False
@@ -640,6 +667,22 @@ class CacheClient:
     understands: a v2 store, a legacy one-method ``fetch_block`` store
     (adapted), or ``None`` for metadata-only clients.
 
+    **Degraded-mode reads** (``degraded=True``, the default): when the
+    kernel raises :class:`ShardUnavailableError` — a shard worker of the
+    multi-process driver died, is restarting, or exhausted its restart
+    budget — the client serves the affected requests *around* the
+    kernel: it synthesizes an all-miss outcome from the store's file
+    geometry and fetches the bytes straight from the backing store, so
+    callers always get correct bytes and never hang on a dead worker.
+    Only the failed sub-batch degrades; outcomes the surviving shards
+    already produced are kept (re-reading would double-observe their
+    keys).  Degraded traffic is counted in :class:`ClientStats`.  The
+    only error a reader sees is the backing store itself permanently
+    failing.  ``breaker`` (a ``storage.api.CircuitBreaker``) optionally
+    guards every client-side byte fetch against a store that is failing
+    hard: after K consecutive transient failures calls fast-fail with
+    ``CircuitOpenError`` until the breaker half-opens.
+
     Time: pass ``now`` explicitly (virtual-clock callers) or omit it to
     use the client's ``clock`` (default ``time.monotonic``).
     """
@@ -649,7 +692,9 @@ class CacheClient:
                  executor: Optional[PrefetchExecutor] = None,
                  clock: Optional[Callable[[], float]] = None,
                  fetch_bytes: bool = False,
-                 retry=None) -> None:
+                 retry=None,
+                 degraded: bool = True,
+                 breaker=None) -> None:
         from ..storage.api import RetryPolicy, as_backing_store
         self.engine = engine
         self.backing = as_backing_store(backing)
@@ -658,7 +703,18 @@ class CacheClient:
         # own block_size — a mismatch would silently return wrong bytes
         _sync_block_size(engine.meta, engine.cfg)
         _sync_block_size(self.backing, engine.cfg)
-        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker = breaker
+        if retry is not None:
+            self.retry = retry
+        elif breaker is not None:
+            # the default policy adopts the breaker so *every* fetch
+            # path (executor workers included) rides it
+            self.retry = RetryPolicy(breaker=breaker)
+        else:
+            self.retry = RetryPolicy()
+        self.degraded = degraded
+        self.client_stats = ClientStats()
+        self._cstats_lock = threading.Lock()
         self.clock = clock or time.monotonic
         self.guard = KernelGuard(engine)
         self.executor = executor if executor is not None else SimExecutor()
@@ -677,11 +733,22 @@ class CacheClient:
              now: Optional[float] = None, *,
              fetch: Optional[bool] = None) -> ReadResult:
         """Serve one extent: kernel read → executor-dispatched prefetch →
-        (optionally) bytes for the requested range."""
+        (optionally) bytes for the requested range.  A dead shard
+        degrades to a direct store fetch instead of raising (see the
+        class docstring)."""
         if now is None:
             now = self.clock()
-        with self.guard.lock_for(file_path):
-            out = self.engine.read(file_path, offset, size, now)
+        degraded = False
+        try:
+            with self.guard.lock_for(file_path):
+                out = self.engine.read(file_path, offset, size, now)
+        except ShardUnavailableError:
+            if not self.degraded:
+                raise
+            out = self._degraded_outcome(file_path, offset, size)
+            degraded = True
+            with self._cstats_lock:
+                self.client_stats.degraded_reads += 1
         if out.prefetches:
             self.executor.submit(out.prefetches, now)
         want = self.fetch_bytes if fetch is None else fetch
@@ -692,7 +759,8 @@ class CacheClient:
         fetched: Dict[RangeRequest, np.ndarray] = {}
         demand = [r for r, hit in plan if not hit]
         if demand:
-            fetched.update(zip(demand, self.executor.fetch_demand(demand)))
+            fetched.update(zip(demand,
+                               self._fetch_misses(demand, degraded)))
         self._fetch_hits([plan], fetched)
         return ReadResult(out, self._assemble(plan, fetched))
 
@@ -702,12 +770,32 @@ class CacheClient:
         """One kernel ``read_batch`` (tick amortized per batch), prefetch
         dispatch per outcome — and, when fetching bytes, *all* demand
         misses of the batch funneled through one ``fetch_demand`` call
-        (one ``fetch_many`` per shard under the ThreadedExecutor)."""
+        (one ``fetch_many`` per shard under the ThreadedExecutor).  When
+        a shard is down only its sub-batch degrades to direct store
+        fetches; the surviving shards' outcomes are kept as-is."""
         if now is None:
             now = self.clock()
+        requests = list(requests)
+        degraded_idx: Set[int] = set()
         self.guard.acquire_all()
         try:
             outs = self.engine.read_batch(requests, now)
+        except ShardUnavailableError as e:
+            if not self.degraded:
+                raise
+            # patch only the holes: the error carries the healthy
+            # shards' outcomes, and re-issuing them would double-observe
+            partial = (e.partial if e.partial is not None
+                       else [None] * len(requests))
+            holes = (e.indices if e.indices is not None
+                     else [i for i, o in enumerate(partial) if o is None])
+            outs = list(partial)
+            for i in holes:
+                fp, off, sz = requests[i]
+                outs[i] = self._degraded_outcome(fp, off, sz)
+                degraded_idx.add(i)
+            with self._cstats_lock:
+                self.client_stats.degraded_reads += len(degraded_idx)
         finally:
             self.guard.release_all()
         for out in outs:
@@ -720,20 +808,79 @@ class CacheClient:
         plans = [self._plan_ranges(fp, off, sz, out) if out.blocks else []
                  for (fp, off, sz), out in zip(requests, outs)]
         all_demand: List[RangeRequest] = []
+        direct_demand: List[RangeRequest] = []
         seen: Set[RangeRequest] = set()
-        for plan in plans:
+        for j, plan in enumerate(plans):
             for r, hit in plan:
                 if not hit and r not in seen:
                     seen.add(r)
-                    all_demand.append(r)
+                    # a degraded request's shard is dead: its misses
+                    # must not travel through the executor's worker RPC
+                    (direct_demand if j in degraded_idx
+                     else all_demand).append(r)
         fetched: Dict[RangeRequest, np.ndarray] = {}
         if all_demand:
             fetched.update(zip(all_demand,
-                               self.executor.fetch_demand(all_demand)))
+                               self._fetch_misses(all_demand, False)))
+        if direct_demand:
+            fetched.update(zip(direct_demand,
+                               self._fetch_misses(direct_demand, True)))
         self._fetch_hits(plans, fetched)
         return [ReadResult(out,
                            self._assemble(plan, fetched) if plan else None)
                 for out, plan in zip(outs, plans)]
+
+    # ------------------------------------------------------- degraded path
+    def _degraded_outcome(self, file_path: PathT, offset: int,
+                          size: int) -> ReadOutcome:
+        """All-miss outcome for a request whose shard kernel is gone,
+        built from the store's file geometry (clamped to EOF) — the same
+        block decomposition the kernel would have produced, minus any
+        caching/prefetching (the kernel never saw the access)."""
+        bs = self.engine.cfg.block_size
+        try:
+            fsize = self.engine.meta.file_size(file_path)
+        except Exception:
+            fsize = offset + size    # unknown geometry: trust the request
+        end = min(offset + size, fsize)
+        blocks: List[BlockResult] = []
+        if end > offset:
+            first = offset // bs
+            for b in range(first, (end - 1) // bs + 1):
+                blocks.append(BlockResult(
+                    path_key(block_key(file_path, b)),
+                    min(bs, fsize - b * bs), False))
+        return ReadOutcome(blocks, [])
+
+    def _direct_fetch(self, requests: Sequence[RangeRequest]
+                      ) -> List[np.ndarray]:
+        """Degraded byte path: straight to the backing store, bypassing
+        the executor (whose demand path would RPC the dead worker).
+        Retry-guarded and breaker-guarded like every other fetch."""
+        if self.breaker is not None:
+            data = self.retry.call(self.backing.fetch_many, list(requests),
+                                   breaker=self.breaker)
+        else:   # a caller-supplied policy may not take the breaker kwarg
+            data = self.retry.call(self.backing.fetch_many, list(requests))
+        with self._cstats_lock:
+            self.client_stats.degraded_bytes += sum(r[2] for r in requests)
+        return data
+
+    def _fetch_misses(self, demand: List[RangeRequest],
+                      degraded: bool) -> List[np.ndarray]:
+        """Demand misses via the executor — or, for degraded requests /
+        a shard that died after the kernel read, direct from the store
+        so the blocked reader still gets its bytes."""
+        if degraded:
+            return self._direct_fetch(demand)
+        try:
+            return self.executor.fetch_demand(demand)
+        except ShardUnavailableError:
+            if not self.degraded:
+                raise
+            with self._cstats_lock:
+                self.client_stats.fallback_fetches += 1
+            return self._direct_fetch(demand)
 
     # ------------------------------------------------------------ byte paths
     def _require_backing(self) -> None:
@@ -850,10 +997,30 @@ class CacheClient:
     def snapshot(self) -> dict:
         s = self.engine.snapshot()
         s["executor"] = self.executor.stats.snapshot()
+        s["client"] = self.client_stats.snapshot()
         caps = self.store_capabilities()
         if caps is not None:
             s["store"] = {"capabilities": caps.snapshot()}
+        if self.breaker is not None:
+            s.setdefault("store", {})["breaker"] = self.breaker.snapshot()
         return s
+
+    def fault_stats(self) -> dict:
+        """Supervision observability of the underlying driver (shard
+        states, restart budgets, kill/respawn events) plus this client's
+        degraded-path counters.  In-process engines have no failure
+        domains, so their driver section is empty."""
+        fn = getattr(self.engine, "fault_stats", None)
+        got = fn() if fn is not None else {"restarts": 0, "shards": {},
+                                           "events": []}
+        got["client"] = self.client_stats.snapshot()
+        return got
+
+    def shard_states(self) -> List[str]:
+        fn = getattr(self.engine, "shard_states", None)
+        if fn is not None:
+            return fn()
+        return [SHARD_UP] * getattr(self.engine, "n_shards", 1)
 
     def iter_workload_cmus(self):
         return self.engine.iter_workload_cmus()
@@ -912,7 +1079,14 @@ def open_cache(store, capacity: int, *,
                fetch_bytes: bool = False,
                retry=None,
                queue_depth: int = 4096,
-               max_fetch_bytes: int = 4096) -> CacheClient:
+               max_fetch_bytes: int = 4096,
+               degraded: bool = True,
+               breaker=None,
+               supervise: bool = True,
+               restart_budget: int = 3,
+               restart_window_s: float = 60.0,
+               heartbeat_s: Optional[float] = None,
+               rpc_timeout_s: float = 30.0) -> CacheClient:
     """The one constructor path: store (instance or URI) + capacity →
     CacheClient.
 
@@ -942,6 +1116,19 @@ def open_cache(store, capacity: int, *,
     instance.  When omitted it follows the driver: ``"sim"`` in-process,
     ``"process"`` for the process driver.  ``retry`` is the
     ``storage.api.RetryPolicy`` guarding every byte fetch.
+
+    Fault tolerance (see docs/RELIABILITY.md): ``degraded`` keeps reads
+    flowing around a dead shard (direct store fetches, counted in
+    ``ClientStats``); ``breaker`` is an optional
+    ``storage.api.CircuitBreaker`` guarding client-side fetches.  The
+    remaining knobs configure the process driver's supervisor and are
+    ignored by ``driver="thread"`` (in-process shards share this
+    process's fate — there is nothing to supervise): ``supervise``
+    (respawn dead shard workers), ``restart_budget`` restarts per
+    ``restart_window_s`` seconds before a shard goes permanently down,
+    ``heartbeat_s`` (liveness deadline for hung-worker detection, off by
+    default), and ``rpc_timeout_s`` (per-RPC reply deadline; a breach
+    kills and respawns the worker instead of hanging the caller).
     """
     if isinstance(store, str):
         from ..storage.api import open_store
@@ -966,7 +1153,10 @@ def open_cache(store, capacity: int, *,
             arena_bytes=(DEFAULT_ARENA_BYTES if arena_bytes is None
                          else arena_bytes),
             backing=backing,     # workers serve demand misses from it
-            retry=retry)
+            retry=retry,
+            supervise=supervise, restart_budget=restart_budget,
+            restart_window_s=restart_window_s, heartbeat_s=heartbeat_s,
+            rpc_timeout_s=rpc_timeout_s)
     else:
         if n_procs is not None:
             raise ValueError("n_procs only applies to driver='process'")
@@ -989,7 +1179,8 @@ def open_cache(store, capacity: int, *,
     try:
         client = CacheClient(engine, backing=backing, executor=executor,
                              clock=clock, fetch_bytes=fetch_bytes,
-                             retry=retry)
+                             retry=retry, degraded=degraded,
+                             breaker=breaker)
     except BaseException:
         engine_close = getattr(engine, "close", None)
         if engine_close is not None:     # never leak worker processes

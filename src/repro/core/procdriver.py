@@ -69,7 +69,10 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
 
 import numpy as np
 
+from ..train.fault import Heartbeat
 from .client import PrefetchExecutor, _sync_block_size
+from .faults import (RestartBudget, SHARD_DOWN, SHARD_RESTARTING, SHARD_UP,
+                     ShardUnavailableError)
 from .igtcache import EngineOptions, IGTCache, ReadOutcome
 from .meta import StoreMeta
 from .sharded import (DemandSummary, GlobalRebalancer, ShardDemandTracker,
@@ -78,6 +81,8 @@ from .types import CacheConfig, CacheStats, MB, PathT, Pattern
 
 __all__ = ["ProcessExecutor", "ProcessShardedCache", "ShmArena",
            "WireOutcome"]
+
+_UNSET = object()          # sentinel: "use the driver's default rpc timeout"
 
 DEFAULT_ARENA_BYTES = 64 * MB
 # background candidates coalesced into one prefetch_batch command
@@ -94,9 +99,35 @@ class _RegionAllocator:
     arrive as piggybacked ``(offset, length)`` pairs on later commands
     and coalesce with adjacent free intervals."""
 
-    def __init__(self, offset: int, length: int) -> None:
+    def __init__(self, offset: int, length: int,
+                 reserved: Sequence[Tuple[int, int]] = ()) -> None:
         self._free: List[Tuple[int, int]] = ([(offset, length)]
                                              if length > 0 else [])
+        # respawn path: slots the *previous* worker generation handed to
+        # the client as live arena views are carved out up front, so the
+        # fresh allocator can never hand them to new fetches while the
+        # client still reads them; the client's piggybacked frees return
+        # them to the pool as the old views are collected.
+        for off, n in sorted(reserved):
+            self.reserve(off, n)
+
+    def reserve(self, offset: int, n: int) -> bool:
+        """Remove ``[offset, offset+n)`` from the free list (must lie
+        inside one free interval — true for slots the previous
+        generation allocated from the same region)."""
+        if n <= 0:
+            return True
+        for i, (off, length) in enumerate(self._free):
+            if off <= offset and offset + n <= off + length:
+                pieces = []
+                if offset > off:
+                    pieces.append((off, offset - off))
+                tail = (off + length) - (offset + n)
+                if tail > 0:
+                    pieces.append((offset + n, tail))
+                self._free[i:i + 1] = pieces
+                return True
+        return False
 
     def alloc(self, n: int) -> int:
         """Absolute offset of an ``n``-byte slot, or -1 when exhausted."""
@@ -237,7 +268,8 @@ def _worker_main(conn, shm_name: Optional[str], region: Tuple[int, int],
                  spec, backing_spec, capacity: int,
                  cfg: Optional[CacheConfig],
                  options: Optional[EngineOptions], sid: int,
-                 retry, pause_gc: bool) -> None:
+                 retry, pause_gc: bool,
+                 reserved: Sequence[Tuple[int, int]] = ()) -> None:
     """Shard worker entry point: build the kernel + per-process store,
     then serve commands until ``stop``/EOF.  Every inbound message is
     ``(op, frees, payload)`` — ``frees`` returns arena slots the client
@@ -260,7 +292,7 @@ def _worker_main(conn, shm_name: Optional[str], region: Tuple[int, int],
         shm = shared_memory.SharedMemory(name=shm_name)
     state = _WorkerState(sid, kernel, store, as_backing_store(backing_store),
                          retry if retry is not None else RetryPolicy(),
-                         shm, _RegionAllocator(*region))
+                         shm, _RegionAllocator(*region, reserved=reserved))
     if pause_gc:
         gc.disable()
     try:
@@ -586,7 +618,8 @@ class _ShardChannel:
     priority.  Pending arena frees piggyback on the next outbound
     command."""
 
-    def __init__(self, sid: int, conn, proc) -> None:
+    def __init__(self, sid: int, conn, proc, capacity: int = 0,
+                 budget: Optional[RestartBudget] = None) -> None:
         self.sid = sid
         self.conn = conn
         self.proc = proc
@@ -600,6 +633,16 @@ class _ShardChannel:
         self.batch_inflight = False
         self.pending_frees: List[Tuple[int, int]] = []
         self.closed = False                # no new sends accepted
+        # -- fault-tolerance state (supervisor-owned transitions) -----------
+        self.state = SHARD_UP              # up | restarting | down
+        self.generation = 0                # bumped on every respawn
+        self.capacity = capacity           # client-tracked (frozen on death)
+        self.budget = budget or RestartBudget()
+        self.live: Dict[int, int] = {}     # arena slots with client views
+        self.last_stats: Optional[dict] = None   # last good "stats" reply
+        self.stats_carry = CacheStats()    # counters from dead generations
+        self.recv_thread: Optional[threading.Thread] = None
+        self.died_at = 0.0                 # monotonic time of last death
 
     # -- outbound ------------------------------------------------------------
     def send_rpc(self, rpc: _RPC) -> bool:
@@ -676,11 +719,22 @@ class _ShardChannel:
             return items
 
     # -- arena frees ---------------------------------------------------------
+    def note_live(self, offset: int, length: int) -> None:
+        """An arena slot descriptor reached the client: until its views
+        are collected, a respawned worker must treat it as reserved."""
+        if length > 0:
+            with self.cv:
+                self.live[offset] = length
+
     def queue_free(self, offset: int, length: int) -> None:
         """Arena slot released client-side (last view collected): queue
-        it for the worker's allocator, shipped with the next command."""
+        it for the worker's allocator, shipped with the next command.
+        While the shard is RESTARTING the free still queues — the next
+        generation's allocator has the slot carved out as reserved and
+        this free is what eventually returns it to the pool."""
         with self.cv:
-            if not self.closed:
+            self.live.pop(offset, None)
+            if not self.closed or self.state == SHARD_RESTARTING:
                 self.pending_frees.append((offset, length))
 
     def take_frees(self) -> List[Tuple[int, int]]:
@@ -689,10 +743,26 @@ class _ShardChannel:
             self.pending_frees = []
             return frees
 
+    def begin_respawn(self) -> List[Tuple[int, int]]:
+        """Atomic hand-off point for a respawn: returns the live-slot
+        snapshot the new worker must reserve and drops frees queued for
+        the *old* allocator (their slots are not in the snapshot, so the
+        new allocator already considers them free — shipping them would
+        double-free).  Frees queued after this call are for reserved
+        slots and ship normally."""
+        with self.cv:
+            self.pending_frees = []
+            return list(self.live.items())
+
     def wait_idle(self, timeout: Optional[float]) -> bool:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self.cv:
             while self.outstanding > 0:
+                if self.closed:
+                    # dead channel: its queued work has been drained /
+                    # failed — report the truth promptly instead of
+                    # sleeping out the caller's full timeout
+                    return False
                 rem = None if deadline is None else deadline - time.monotonic()
                 if rem is not None and rem <= 0:
                     return False
@@ -736,7 +806,12 @@ class ProcessShardedCache(ShardRouting):
                  backing=None,
                  start_method: Optional[str] = None,
                  retry=None,
-                 pause_worker_gc: bool = False) -> None:
+                 pause_worker_gc: bool = False,
+                 supervise: bool = True,
+                 restart_budget: int = 3,
+                 restart_window_s: float = 60.0,
+                 heartbeat_s: Optional[float] = None,
+                 rpc_timeout_s: Optional[float] = 30.0) -> None:
         if prefetch not in ("client", "inline"):
             raise ValueError(f"prefetch must be 'client' or 'inline', "
                              f"got {prefetch!r}")
@@ -763,20 +838,37 @@ class ProcessShardedCache(ShardRouting):
         self.global_rebalancer = GlobalRebalancer(self.cfg)
         self._inline = prefetch == "inline"
         self._executor: Optional["ProcessExecutor"] = None
+        self._executor_lock = threading.Lock()
         self._closed = False
         self._lock = threading.Lock()
+        self.supervise = supervise
+        self.rpc_timeout_s = rpc_timeout_s
+        self.heartbeat_s = heartbeat_s
+        self._hb = Heartbeat(deadline_s=heartbeat_s or 0.0)
+        # replayed to a respawned worker (its kernel comes back cold)
+        self._pin_log: List[PathT] = []
+        self._never_log: List[PathT] = []
+        self.fault_events: List[dict] = []
+        self._respawn_q: Deque[_ShardChannel] = deque()
+        self._respawn_cv = threading.Condition()
 
         if start_method is None:
             start_method = ("fork" if "fork"
                             in multiprocessing.get_all_start_methods()
                             else "spawn")
         ctx = multiprocessing.get_context(start_method)
+        # everything a respawn needs to rebuild a worker cold
+        self._spawn = dict(ctx=ctx, spec=spec, backing_spec=backing_spec,
+                           retry=retry, pause_gc=pause_worker_gc)
         self.arena = ShmArena(arena_bytes, n_procs)
         self._channels: List[_ShardChannel] = []
         caps = split_capacity(capacity, n_procs)
         # spawn every worker BEFORE starting any dispatcher thread (a
-        # fork of a multi-threaded parent is where fork goes wrong)
-        child_conns = []
+        # fork of a multi-threaded parent is where fork goes wrong).
+        # Each child end is closed IMMEDIATELY after its start: a later
+        # fork must not inherit an earlier pipe's child end, or killing
+        # that earlier worker never EOFs its pipe (the dup keeps the
+        # write side open) and the death goes undetected.
         for sid in range(n_procs):
             parent, child = ctx.Pipe()
             proc = ctx.Process(
@@ -786,19 +878,27 @@ class ProcessShardedCache(ShardRouting):
                       retry, pause_worker_gc),
                 name=f"igt-shard-{sid}", daemon=True)
             proc.start()
-            child_conns.append(child)
-            self._channels.append(_ShardChannel(sid, parent, proc))
-        for child in child_conns:
             child.close()                 # parent keeps only its end
+            self._channels.append(_ShardChannel(
+                sid, parent, proc, capacity=caps[sid],
+                budget=RestartBudget(restart_budget, restart_window_s)))
         self._threads = []
         for ch in self._channels:
             t = threading.Thread(target=self._receive, args=(ch,),
                                  name=f"igt-chan-{ch.sid}", daemon=True)
+            ch.recv_thread = t
             t.start()
             self._threads.append(t)
+        self._supervisor: Optional[threading.Thread] = None
+        if supervise:
+            self._supervisor = threading.Thread(
+                target=self._supervise_loop, name="igt-supervisor",
+                daemon=True)
+            self._supervisor.start()
+        # pass the channel list (not a proc snapshot): respawns swap
+        # ch.proc, and the safety net must kill the *current* generation
         self._finalizer = weakref.finalize(self, _cleanup_leftovers,
-                                           self.arena,
-                                           [ch.proc for ch in self._channels])
+                                           self.arena, self._channels)
         # capability re-negotiation: each worker reports what *its* store
         # instance can do (a URI re-open may differ from the client's)
         self.worker_info = [self._rpc(sid, "hello", None)
@@ -815,17 +915,28 @@ class ProcessShardedCache(ShardRouting):
         fail everything still pending instead of letting callers
         hang."""
         stopped = False
+        beat = self.heartbeat_s is not None
         try:
             while True:
                 try:
                     status, result = ch.conn.recv()
                 except (EOFError, OSError):
                     break
+                if beat:
+                    self._hb.beat(ch.sid, time.monotonic())
                 item = ch.pending.popleft()
                 if isinstance(item, _PrefetchBatch):
                     self._on_batch_reply(ch, item, status, result)
                     self._pump_prefetch(ch)
                     continue
+                if status == "ok" and item.op == "fetch":
+                    # register live arena slots HERE, before the caller
+                    # can even see the descriptors: if the worker dies
+                    # and respawns, the new allocator must already treat
+                    # them as reserved
+                    for entry in result[0]:
+                        if entry[0] == "shm":
+                            ch.note_live(entry[1], entry[2])
                 if status == "err":
                     item.error = result
                 else:
@@ -842,9 +953,12 @@ class ProcessShardedCache(ShardRouting):
     def _fail_channel(self, ch: _ShardChannel, graceful: bool) -> None:
         with ch.send_lock:
             ch.closed = True
-        err = None if graceful else RuntimeError(
+            if not graceful and ch.state == SHARD_UP:
+                ch.state = SHARD_RESTARTING
+        ch.died_at = time.monotonic()
+        err = None if graceful else ShardUnavailableError(
             f"shard worker {ch.sid} died (exit code {ch.proc.exitcode}) "
-            f"with commands in flight")
+            f"with commands in flight", sid=ch.sid, state=ch.state)
         while ch.pending:
             item = ch.pending.popleft()
             if isinstance(item, _PrefetchBatch):
@@ -855,12 +969,30 @@ class ProcessShardedCache(ShardRouting):
             item.event.set()
         # queued-but-never-sent candidates: account as cancelled so the
         # executor identity still balances (the kernel died with its
-        # pending table, there is nothing left to leak)
+        # pending table, there is nothing left to leak).  The executor
+        # pointer is read under the registration lock so a concurrent
+        # ProcessExecutor.close cannot detach between the read and the
+        # accounting (the death-during-close stats race).
         drained = ch.drain_background()
-        sink = self._executor
-        if drained and sink is not None:
-            with sink._stats_lock:
-                sink.stats.cancelled += len(drained)
+        with self._executor_lock:
+            sink = self._executor
+            if drained and sink is not None:
+                with sink._stats_lock:
+                    sink.stats.cancelled += len(drained)
+        if not graceful:
+            # the dead kernel's counters survive as carried history so
+            # the merged driver stats stay (approximately) monotone
+            # across respawns — the delta since the last stats RPC is
+            # lost with the process
+            if ch.last_stats is not None:
+                ch.stats_carry = CacheStats.merged(
+                    [ch.stats_carry, ch.last_stats["stats"]])
+                ch.last_stats = None
+            if self.supervise and not self._closed \
+                    and ch.state == SHARD_RESTARTING:
+                with self._respawn_cv:
+                    self._respawn_q.append(ch)
+                    self._respawn_cv.notify_all()
 
     def _on_batch_reply(self, ch: _ShardChannel, batch: _PrefetchBatch,
                         status: str, result) -> None:
@@ -872,13 +1004,14 @@ class ProcessShardedCache(ShardRouting):
             # executor identity still balances
             completed, retries = 0, 0
             cancelled = errors = len(batch.items)
-        sink = self._executor
-        if sink is not None:
-            with sink._stats_lock:
-                sink.stats.completed += completed
-                sink.stats.cancelled += cancelled
-                sink.stats.retries += retries
-                sink.stats.fetch_errors += errors
+        with self._executor_lock:
+            sink = self._executor
+            if sink is not None:
+                with sink._stats_lock:
+                    sink.stats.completed += completed
+                    sink.stats.cancelled += cancelled
+                    sink.stats.retries += retries
+                    sink.stats.fetch_errors += errors
         ch.batch_done(batch.items)
 
     def _pump_prefetch(self, ch: _ShardChannel) -> None:
@@ -888,7 +1021,8 @@ class ProcessShardedCache(ShardRouting):
         items = ch.pop_batch()
         if not items:
             return
-        sink = self._executor
+        with self._executor_lock:
+            sink = self._executor
         cap = sink.max_fetch_bytes if sink is not None else 0
         batch = _PrefetchBatch(items)
         payload = ([(p, s) for p, s, _, _ in items], items[-1][3], cap)
@@ -897,22 +1031,189 @@ class ProcessShardedCache(ShardRouting):
 
     # ------------------------------------------------------------------ RPC
     def _rpc_async(self, sid: int, op: str, payload) -> _RPC:
+        ch = self._channels[sid]
         rpc = _RPC(op, payload)
-        if not self._channels[sid].send_rpc(rpc):
-            rpc.error = RuntimeError(
-                f"{op!r} on a closed ProcessShardedCache")
+        if not ch.send_rpc(rpc):
+            if self._closed:
+                rpc.error = RuntimeError(
+                    f"{op!r} on a closed ProcessShardedCache")
+            else:
+                rpc.error = ShardUnavailableError(
+                    f"shard {sid} is {ch.state} ({op!r} rejected)",
+                    sid=sid, state=ch.state)
             rpc.event.set()
+        elif self.heartbeat_s is not None:
+            self._hb.beat(sid, time.monotonic())
         return rpc
 
-    def _rpc(self, sid: int, op: str, payload,
-             timeout: Optional[float] = None):
-        return self._rpc_async(sid, op, payload).wait(timeout)
+    def _wait_rpc(self, sid: int, rpc: _RPC, timeout=_UNSET):
+        """Bounded wait: a worker that neither replies nor dies within
+        the RPC timeout is treated as hung — it is killed (SIGKILL works
+        on a SIGSTOPped process too), which breaks the pipe and routes
+        it through the normal death → supervision path — and the caller
+        gets a typed ``ShardUnavailableError`` instead of blocking
+        forever."""
+        t = self.rpc_timeout_s if timeout is _UNSET else timeout
+        try:
+            return rpc.wait(t)
+        except TimeoutError:
+            self._kill_worker(sid, f"RPC {rpc.op!r} exceeded {t}s")
+            raise ShardUnavailableError(
+                f"shard {sid} RPC {rpc.op!r} timed out after {t}s",
+                sid=sid, state=self._channels[sid].state) from None
 
-    def _broadcast(self, op: str, payload,
-                   timeout: Optional[float] = None) -> list:
-        rpcs = [self._rpc_async(sid, op, payload)
-                for sid in range(self.n_shards)]
-        return [r.wait(timeout) for r in rpcs]
+    def _kill_worker(self, sid: int, reason: str) -> None:
+        ch = self._channels[sid]
+        proc = ch.proc
+        if proc.is_alive():
+            kill = getattr(proc, "kill", proc.terminate)
+            kill()
+        self.fault_events.append({"sid": sid, "kind": "kill",
+                                  "reason": reason,
+                                  "at": time.monotonic(),
+                                  "generation": ch.generation})
+
+    def _rpc(self, sid: int, op: str, payload, timeout=_UNSET):
+        return self._wait_rpc(sid, self._rpc_async(sid, op, payload),
+                              timeout)
+
+    def _broadcast(self, op: str, payload, timeout=_UNSET,
+                   tolerant: bool = False) -> list:
+        """Fan an RPC to all shards.  ``tolerant`` skips shards that are
+        not UP and swallows per-shard unavailability (used for controls
+        and maintenance, which a down shard must not poison)."""
+        sids = [sid for sid in range(self.n_shards)
+                if not tolerant or self._channels[sid].state == SHARD_UP]
+        rpcs = [(sid, self._rpc_async(sid, op, payload)) for sid in sids]
+        out = []
+        for sid, r in rpcs:
+            try:
+                out.append(self._wait_rpc(sid, r, timeout))
+            except ShardUnavailableError:
+                if not tolerant:
+                    raise
+        return out
+
+    # ------------------------------------------------------------ supervisor
+    def _supervise_loop(self) -> None:
+        """One supervision thread per driver: respawns dead workers
+        (queued by the receiver threads' ``_fail_channel``) and, when
+        ``heartbeat_s`` is set, kills workers that have in-flight
+        commands but no pipe activity within the deadline (a hung/
+        suspended worker never breaks its own pipe — this turns a stall
+        into a detectable death)."""
+        poll = (min(self.heartbeat_s / 2, 0.2)
+                if self.heartbeat_s else 0.5)
+        while True:
+            with self._respawn_cv:
+                if not self._respawn_q and not self._closed:
+                    self._respawn_cv.wait(poll)
+                if self._closed:
+                    return
+                ch = self._respawn_q.popleft() if self._respawn_q else None
+            if ch is not None:
+                self._respawn(ch)
+                continue
+            if self.heartbeat_s is not None:
+                self._check_stalls()
+
+    def _check_stalls(self) -> None:
+        now = time.monotonic()
+        for sid in self._hb.dead_workers(now):
+            ch = self._channels[sid]
+            # only a worker with commands in flight can be "stalled" —
+            # an idle worker legitimately sends nothing
+            if ch.state == SHARD_UP and ch.pending and ch.proc.is_alive():
+                self._kill_worker(sid, f"heartbeat missed "
+                                       f"({self.heartbeat_s}s)")
+            self._hb.beat(sid, now)    # one kill per stall detection
+
+    def _respawn(self, ch: _ShardChannel) -> None:
+        """Bring a dead shard back: fresh process, same region and
+        capacity, store re-opened from its spec, kernel rebuilt cold.
+        Slots with live client views are pre-reserved so stale reads
+        stay valid; the restart budget turns a crash loop into a
+        permanent, stable DOWN."""
+        now = time.monotonic()
+        if self._closed or self.arena._closed \
+                or ch.state != SHARD_RESTARTING:
+            return
+        if not ch.budget.allow(now):
+            ch.state = SHARD_DOWN
+            self.fault_events.append({
+                "sid": ch.sid, "kind": "down", "died_at": ch.died_at,
+                "at": now, "generation": ch.generation,
+                "restarts_used": ch.budget.used})
+            return
+        sp = self._spawn
+        ctx = sp["ctx"]
+        reserved = ch.begin_respawn()
+        parent, child = ctx.Pipe()
+        proc = ctx.Process(
+            target=_worker_main,
+            args=(child, self.arena.name, self.arena.region(ch.sid),
+                  sp["spec"], sp["backing_spec"], ch.capacity, self.cfg,
+                  self.options, ch.sid, sp["retry"], sp["pause_gc"],
+                  reserved),
+            name=f"igt-shard-{ch.sid}g{ch.generation + 1}", daemon=True)
+        try:
+            proc.start()
+        except Exception:                   # pragma: no cover - fork failed
+            ch.state = SHARD_DOWN
+            self.fault_events.append({
+                "sid": ch.sid, "kind": "down", "died_at": ch.died_at,
+                "at": now, "generation": ch.generation,
+                "restarts_used": ch.budget.used})
+            return
+        child.close()
+        with ch.send_lock:
+            ch.conn = parent
+            ch.proc = proc
+            ch.generation += 1
+            ch.closed = False
+            ch.state = SHARD_UP
+        t = threading.Thread(target=self._receive, args=(ch,),
+                             name=f"igt-chan-{ch.sid}g{ch.generation}",
+                             daemon=True)
+        ch.recv_thread = t
+        t.start()
+        self._threads.append(t)
+        if self.heartbeat_s is not None:
+            self._hb.beat(ch.sid, time.monotonic())
+        # the kernel came back cold: replay the sticky controls and
+        # refresh the capability info (best-effort — if it dies again
+        # mid-replay the new receiver routes it back through here)
+        try:
+            for path in self._pin_log:
+                self._rpc(ch.sid, "pin", path)
+            for path in self._never_log:
+                self._rpc(ch.sid, "never_cache", path)
+            self.worker_info[ch.sid] = self._rpc(ch.sid, "hello", None)
+        except (ShardUnavailableError, RuntimeError, TimeoutError):
+            pass
+        up_at = time.monotonic()
+        self.fault_events.append({
+            "sid": ch.sid, "kind": "respawn", "died_at": ch.died_at,
+            "respawned_at": up_at, "recovery_s": up_at - ch.died_at,
+            "generation": ch.generation,
+            "restarts_used": ch.budget.used})
+
+    def fault_stats(self) -> dict:
+        """Supervision observability: per-shard state/generation/budget
+        plus the chronological event log (kills, respawns with recovery
+        time, permanent downs)."""
+        return {
+            "restarts": sum(ch.generation for ch in self._channels),
+            "shards": {ch.sid: {"state": ch.state,
+                                "generation": ch.generation,
+                                "restarts_used": ch.budget.used,
+                                "capacity": ch.capacity}
+                       for ch in self._channels},
+            "events": list(self.fault_events),
+        }
+
+    def shard_states(self) -> List[str]:
+        return [ch.state for ch in self._channels]
 
     # ------------------------------------------------------------------ read
     def read(self, file_path: PathT, offset: int, size: int,
@@ -934,49 +1235,82 @@ class ProcessShardedCache(ShardRouting):
         batch in parallel across processes."""
         requests = list(requests)
         if self.n_shards == 1:
-            encs, _ = self._rpc(0, "read_batch",
-                                (requests, now, self._inline))
+            try:
+                encs, _ = self._rpc(0, "read_batch",
+                                    (requests, now, self._inline))
+            except ShardUnavailableError as e:
+                raise ShardUnavailableError(
+                    str(e), sid=e.sid, state=e.state,
+                    partial=[None] * len(requests),
+                    indices=list(range(len(requests)))) from None
             return [WireOutcome(e, req[0])
                     for e, req in zip(encs, requests)]
         buckets = self.bucket_by_shard(requests)
-        pending = [(items, self._rpc_async(
+        pending = [(sid, items, self._rpc_async(
                         sid, "read_batch",
                         ([r for _, r in items], now, self._inline)))
                    for sid, items in buckets.items()]
         outs: List[Optional[WireOutcome]] = [None] * len(requests)
-        for items, rpc in pending:
-            encs, _ = rpc.wait()
+        failed: List[int] = []
+        first: Optional[ShardUnavailableError] = None
+        for sid, items, rpc in pending:
+            try:
+                encs, _ = self._wait_rpc(sid, rpc)
+            except ShardUnavailableError as e:
+                # keep collecting the healthy shards' outcomes — the
+                # error carries them so the client degrades only the
+                # failed sub-batch instead of re-reading (and thereby
+                # double-observing) the survivors
+                if first is None:
+                    first = e
+                failed.extend(i for i, _ in items)
+                continue
             for (i, req), enc in zip(items, encs):
                 outs[i] = WireOutcome(enc, req[0])
+        if first is not None:
+            raise ShardUnavailableError(
+                str(first), sid=first.sid, state=first.state,
+                partial=outs, indices=sorted(failed)) from None
         return outs  # type: ignore[return-value]
 
     # ------------------------------------------------------------- prefetch
     def complete_prefetch(self, path: PathT, size: int, now: float) -> bool:
-        return self._rpc(self.shard_id(path), "complete", (path, size, now))
+        try:
+            return self._rpc(self.shard_id(path), "complete",
+                             (path, size, now))
+        except ShardUnavailableError:
+            # the kernel died with its pending table — nothing to admit
+            return False
 
     def cancel_prefetch(self, path: PathT) -> None:
-        self._rpc(self.shard_id(path), "cancel", path)
+        try:
+            self._rpc(self.shard_id(path), "cancel", path)
+        except ShardUnavailableError:
+            pass                 # dead kernel: nothing left to leak
 
     # ------------------------------------------------------------------ tick
     def tick(self, now: float) -> None:
         """Per-shard maintenance plus, when due, the cross-shard round
-        over the workers' serialized demand summaries."""
+        over the workers' serialized demand summaries.  Down/restarting
+        shards are skipped — maintenance must not poison the callers."""
         if (self.n_shards > 1 and self.options.allocation == "adaptive"
                 and self.global_rebalancer.due(now)):
             self.rebalance_now(now)
-        for rpc in [self._rpc_async(sid, "tick", now)
-                    for sid in range(self.n_shards)]:
-            rpc.wait()
+        self._broadcast("tick", now, tolerant=True)
 
     def rebalance_now(self, now: float) -> int:
         """One cross-shard allocation round: gather ``DemandSummary``
-        rows from every worker, plan with the same greedy rule as the
-        in-process facade, ship the deltas back.  Returns the number of
-        quantum moves applied."""
+        rows from the *reachable* workers, plan with the same greedy
+        rule as the in-process facade, ship the deltas back.  A down
+        shard contributes no rows, so its capacity is frozen exactly
+        where it died — moves conserve capacity among the survivors and
+        the cluster total stays intact for when it returns.  Returns the
+        number of quantum moves applied."""
         reb = self.global_rebalancer
         reb.last_round = now
         rows: List[DemandSummary] = []
-        for got in self._broadcast("rebalance_summary", now):
+        for got in self._broadcast("rebalance_summary", now,
+                                   tolerant=True):
             rows.extend(got)
         moves = reb.plan_moves(rows)
         if not moves:
@@ -989,21 +1323,31 @@ class ProcessShardedCache(ShardRouting):
             cap_delta[donor.shard] = cap_delta.get(donor.shard, 0) - amt
             cap_delta[taker.shard] = cap_delta.get(taker.shard, 0) + amt
             grows.setdefault(taker.shard, []).append((taker.key, amt))
-        pending = [self._rpc_async(sid, "rebalance_apply",
-                                   (shrinks.get(sid, []),
-                                    cap_delta.get(sid, 0),
-                                    grows.get(sid, [])))
+        # client-tracked capacities move FIRST: they are what a respawn
+        # hands the replacement worker, so even a death mid-apply keeps
+        # sum(shard capacities) == cluster capacity
+        for sid, delta in cap_delta.items():
+            self._channels[sid].capacity += delta
+        pending = [(sid, self._rpc_async(sid, "rebalance_apply",
+                                         (shrinks.get(sid, []),
+                                          cap_delta.get(sid, 0),
+                                          grows.get(sid, []))))
                    for sid in cap_delta]
-        for rpc in pending:
-            rpc.wait()
+        for sid, rpc in pending:
+            try:
+                self._wait_rpc(sid, rpc)
+            except ShardUnavailableError:
+                pass   # respawn re-applies via ch.capacity
         return len(moves)
 
     # ------------------------------------------------------------- controls
     def pin(self, path: PathT) -> None:
-        self._broadcast("pin", path)
+        self._pin_log.append(path)    # replayed to respawned (cold) workers
+        self._broadcast("pin", path, tolerant=True)
 
     def never_cache(self, path: PathT) -> None:
-        self._broadcast("never_cache", path)
+        self._never_log.append(path)
+        self._broadcast("never_cache", path, tolerant=True)
 
     def invalidate_meta_cache(self) -> None:
         """Mid-run dataset change (the ``LocalFSStore.refresh``
@@ -1015,11 +1359,39 @@ class ProcessShardedCache(ShardRouting):
         refresh = getattr(self.meta, "refresh", None)
         if callable(refresh):
             refresh()
-        self._broadcast("invalidate_meta", None)
+        self._broadcast("invalidate_meta", None, tolerant=True)
 
     # ----------------------------------------------------------------- stats
+    def _channel_stats(self, ch: _ShardChannel) -> dict:
+        """One shard's stats dict — live from the worker when it is UP,
+        else the last reply seen before it died (capacity overridden
+        with the client-tracked value, which stays authoritative across
+        rebalances and respawns)."""
+        if ch.state == SHARD_UP:
+            try:
+                got = self._rpc(ch.sid, "stats", None)
+                ch.last_stats = got
+                return got
+            except ShardUnavailableError:
+                pass
+        got = dict(ch.last_stats) if ch.last_stats is not None else {
+            "stats": CacheStats(), "nodes": 0, "used": 0, "cmus": 0,
+            "pending": 0, "spills": 0, "arena_free": 0}
+        got["capacity"] = ch.capacity
+        return got
+
     def _gather_stats(self) -> List[dict]:
-        return self._broadcast("stats", None)
+        out = []
+        for ch in self._channels:
+            g = self._channel_stats(ch)
+            if ch.generation > 0:
+                # fold in the counters carried over from generations
+                # that died (a respawned kernel restarts from zero)
+                g = dict(g)
+                g["stats"] = CacheStats.merged([ch.stats_carry,
+                                                g["stats"]])
+            out.append(g)
+        return out
 
     @property
     def stats(self) -> CacheStats:
@@ -1067,15 +1439,24 @@ class ProcessShardedCache(ShardRouting):
         processes; what crosses back is a read-only :class:`CmuView`
         (quota/used/hits/misses/pattern), not the live object."""
         for sid in range(self.n_shards):
-            for path, pat, quota, used, hits, misses in \
-                    self._rpc(sid, "cmus", None):
+            if self._channels[sid].state != SHARD_UP:
+                continue
+            try:
+                rows = self._rpc(sid, "cmus", None)
+            except ShardUnavailableError:
+                continue
+            for path, pat, quota, used, hits, misses in rows:
                 yield tuple(path), CmuView(tuple(path), Pattern(pat),
                                            quota, used, hits, misses)
 
     # ------------------------------------------------------------- executor
     def _register_executor(self,
                            executor: Optional["ProcessExecutor"]) -> None:
-        self._executor = executor
+        # under the lock so a receiver thread mid-death-accounting can
+        # never race an executor attaching/detaching (satellite: the
+        # death-during-close stats race)
+        with self._executor_lock:
+            self._executor = executor
 
     def flush(self, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -1094,6 +1475,12 @@ class ProcessShardedCache(ShardRouting):
             if self._closed:
                 return
             self._closed = True
+        # stop the supervisor first: no respawns may race the shutdown
+        with self._respawn_cv:
+            self._respawn_q.clear()
+            self._respawn_cv.notify_all()
+        if self._supervisor is not None:
+            self._supervisor.join(timeout=timeout)
         for ch in self._channels:
             ch.drain_background()
         # the stop command rides the normal FIFO, so every in-flight
@@ -1133,12 +1520,12 @@ class ProcessShardedCache(ShardRouting):
         self.close()
 
 
-def _cleanup_leftovers(arena: ShmArena, procs) -> None:
+def _cleanup_leftovers(arena: ShmArena, channels) -> None:
     """GC / interpreter-exit safety net: never leak worker processes or
     the shared-memory block when a driver is dropped without close()."""
-    for p in procs:
-        if p.is_alive():
-            p.terminate()
+    for ch in channels:
+        if ch.proc.is_alive():
+            ch.proc.terminate()
     arena.close()
 
 
@@ -1260,7 +1647,7 @@ class ProcessExecutor(PrefetchExecutor):
         error: Optional[BaseException] = None
         for sid, items, rpc in pending:
             try:
-                entries, retries = rpc.wait()
+                entries, retries = d._wait_rpc(sid, rpc)
             except BaseException as e:
                 with self._stats_lock:
                     self.stats.fetch_errors += 1

@@ -1,0 +1,180 @@
+"""Chaos harness: seeded worker-failure injection for the fault runtime.
+
+The supervision/recovery machinery in ``core.procdriver`` is only as
+trustworthy as the failures it has been marched through.  This module is
+the controlled failure source: a :class:`ChaosMonkey` that kills
+(SIGKILL) or wedges (SIGSTOP/SIGCONT) the shard workers of a
+``ProcessShardedCache`` on demand, a deterministic strike planner
+(``plan_strikes`` — same seed, same schedule), and a
+:class:`ChaosSchedule` that fires the planned strikes as a trace driver
+advances through its steps.  The cluster simulator accepts the same
+strikes as virtual-time events (``ClusterSim(chaos_events=...)``), so a
+mixed-workload trace can lose a shard mid-run and the whole
+read → degrade → respawn → re-warm arc plays out inside one test.
+
+Strikes are *count-driven* (fire at step N), not wall-clock-driven:
+schedules replay bit-identically regardless of machine speed, which is
+what lets the fault matrix in tests/test_chaos.py assert exact
+bookkeeping (conservation identities, zero lost reads) instead of
+sampling a race.
+
+Only the process driver has failure domains to strike; handing an
+in-process engine to the monkey is a ``TypeError``, not a silent no-op.
+"""
+from __future__ import annotations
+
+import os
+import random
+import signal
+import time
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set
+
+__all__ = ["ChaosMonkey", "ChaosSchedule", "ChaosStrike", "plan_strikes"]
+
+KINDS = ("kill", "suspend", "resume")
+
+
+@dataclass(frozen=True)
+class ChaosStrike:
+    """One planned failure: at trace step ``step``, do ``kind`` to shard
+    ``sid``."""
+
+    step: int
+    kind: str          # "kill" | "suspend" | "resume"
+    sid: int
+
+
+class ChaosMonkey:
+    """Failure injector over a multi-process shard driver.
+
+    ``target`` is a ``ProcessShardedCache`` or a ``CacheClient`` wrapping
+    one.  ``kill`` routes through the driver's own kill path (so the
+    fault shows up in ``fault_stats()`` exactly like an RPC-timeout
+    kill); ``suspend``/``resume`` SIGSTOP/SIGCONT the worker process
+    directly — a stopped worker is the hung-worker case: the pipe stays
+    open, no EOF fires, and only heartbeat/RPC deadlines can notice.
+
+    Every strike lands in ``self.strikes`` (kind, sid, pid, generation,
+    wall time) for post-run audit.
+    """
+
+    def __init__(self, target) -> None:
+        driver = getattr(target, "engine", target)
+        if not hasattr(driver, "_channels") or \
+                not hasattr(driver, "_kill_worker"):
+            raise TypeError(
+                "ChaosMonkey needs a ProcessShardedCache (or a CacheClient "
+                f"over one); got {type(driver).__name__} — in-process "
+                "engines have no worker processes to strike")
+        self.driver = driver
+        self.strikes: List[dict] = []
+        self._suspended: Set[int] = set()
+
+    # ------------------------------------------------------------- strikes
+    def _log(self, kind: str, sid: int, pid: Optional[int]) -> None:
+        ch = self.driver._channels[sid]
+        self.strikes.append({"kind": kind, "sid": sid, "pid": pid,
+                             "generation": ch.generation,
+                             "at": time.monotonic()})
+
+    def kill(self, sid: int, reason: str = "chaos") -> None:
+        """SIGKILL the shard's current worker via the driver's kill path
+        (fault event recorded, supervisor respawns if budget allows)."""
+        ch = self.driver._channels[sid]
+        pid = ch.proc.pid
+        self.driver._kill_worker(sid, reason)
+        self._suspended.discard(sid)
+        self._log("kill", sid, pid)
+
+    def suspend(self, sid: int) -> None:
+        """SIGSTOP the worker: alive to the OS, dead to its callers.
+        Undetectable by pipe EOF — this is the case heartbeats and RPC
+        deadlines exist for."""
+        pid = self.driver._channels[sid].proc.pid
+        try:
+            os.kill(pid, signal.SIGSTOP)
+            self._suspended.add(sid)
+        except ProcessLookupError:      # already gone: nothing to wedge
+            pid = None
+        self._log("suspend", sid, pid)
+
+    def resume(self, sid: int) -> None:
+        """SIGCONT a suspended worker (no-op if it was never suspended or
+        the supervisor already killed and replaced it)."""
+        if sid not in self._suspended:
+            return
+        self._suspended.discard(sid)
+        pid = self.driver._channels[sid].proc.pid
+        try:
+            os.kill(pid, signal.SIGCONT)
+        except ProcessLookupError:
+            pid = None
+        self._log("resume", sid, pid)
+
+    def resume_all(self) -> None:
+        """Un-wedge everything — call from test teardown so a failing
+        assertion never leaves stopped processes behind."""
+        for sid in list(self._suspended):
+            self.resume(sid)
+
+    def strike(self, kind: str, sid: int) -> None:
+        if kind not in KINDS:
+            raise ValueError(f"unknown strike kind {kind!r}; "
+                             f"expected one of {KINDS}")
+        getattr(self, kind)(sid)
+
+
+def plan_strikes(n_steps: int, *, n_shards: int, seed: int = 0,
+                 n_strikes: int = 1, kinds: Sequence[str] = ("kill",),
+                 min_step: int = 1, resume_after: int = 3
+                 ) -> List[ChaosStrike]:
+    """Deterministic strike schedule: ``n_strikes`` failures at distinct
+    pseudo-random steps in ``[min_step, n_steps)``, kinds and target
+    shards drawn from the same seeded stream.  Every planned ``suspend``
+    is paired with a ``resume`` ``resume_after`` steps later (clamped to
+    the trace) so a schedule can never leave a worker wedged past the
+    run.  Same (seed, shape) → same schedule, always."""
+    for k in kinds:
+        if k not in ("kill", "suspend"):
+            raise ValueError(f"plannable kinds are kill/suspend, got {k!r}")
+    if n_steps <= min_step:
+        raise ValueError("trace too short for the requested strike window")
+    rng = random.Random(seed)
+    span = range(min_step, n_steps)
+    steps = sorted(rng.sample(span, min(n_strikes, len(span))))
+    out: List[ChaosStrike] = []
+    for step in steps:
+        kind = kinds[rng.randrange(len(kinds))]
+        sid = rng.randrange(n_shards)
+        out.append(ChaosStrike(step, kind, sid))
+        if kind == "suspend":
+            out.append(ChaosStrike(min(n_steps - 1, step + resume_after),
+                                   "resume", sid))
+    return sorted(out, key=lambda s: (s.step, s.kind != "resume"))
+
+
+class ChaosSchedule:
+    """Binds a strike plan to a monkey: the trace driver calls
+    ``on_step(i)`` once per step and every strike planned at step ``i``
+    fires.  ``fired`` is the executed subset (a strike against a shard
+    can fire at most once per plan entry)."""
+
+    def __init__(self, monkey: ChaosMonkey,
+                 strikes: Sequence[ChaosStrike]) -> None:
+        self.monkey = monkey
+        self._by_step: Dict[int, List[ChaosStrike]] = defaultdict(list)
+        for s in strikes:
+            self._by_step[s.step].append(s)
+        self.fired: List[ChaosStrike] = []
+
+    def on_step(self, step: int) -> List[ChaosStrike]:
+        due = self._by_step.pop(step, [])
+        for s in due:
+            self.monkey.strike(s.kind, s.sid)
+            self.fired.append(s)
+        return due
+
+    def close(self) -> None:
+        self.monkey.resume_all()

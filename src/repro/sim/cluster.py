@@ -79,6 +79,7 @@ class SimResult:
     link_utilization: float
     step_trace: Dict[int, List[float]]         # job_id -> step finish times
     alloc_trace: List[dict] = field(default_factory=list)
+    chaos_log: List[dict] = field(default_factory=list)
 
     @property
     def avg_jct(self) -> float:
@@ -91,7 +92,9 @@ class ClusterSim:
                  local_latency_s: float = 0.0005,
                  local_bandwidth_Bps: float = 6e9,
                  trace_alloc: bool = False,
-                 stop_job_at: Optional[Tuple[int, float]] = None) -> None:
+                 stop_job_at: Optional[Tuple[int, float]] = None,
+                 chaos_events: Optional[List[Tuple[float, str, int]]]
+                 = None) -> None:
         self.suite = suite
         self.link = SharedLink(bandwidth_Bps, latency_s)
         # Accept either layer: a CacheClient (open_cache path) or a bare
@@ -112,6 +115,13 @@ class ClusterSim:
         self.local_bw = local_bandwidth_Bps
         self.trace_alloc = trace_alloc
         self.stop_job_at = stop_job_at       # (job_id, time): forced stop (Fig 11)
+        # (virtual time, kind, sid) strikes against a process-backed
+        # engine: the chaos arc (kill → degraded reads → respawn →
+        # re-warm) plays out inside the simulated trace.  Only valid
+        # when the engine is a multi-process driver (sim.chaos).
+        self.chaos_events = list(chaos_events or [])
+        self._chaos = None
+        self._chaos_log: List[dict] = []
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
         self._waiters: Dict[str, List[int]] = {}
@@ -128,12 +138,21 @@ class ClusterSim:
     def _push(self, t: float, kind: str, payload: object = None) -> None:
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
 
+    def at(self, t: float, fn: Callable[["ClusterSim"], None]) -> None:
+        """Schedule ``fn(sim)`` at virtual time ``t`` (before ``run``):
+        a measurement probe inside the event loop — the chaos tests use
+        it to snapshot stats at fixed virtual times so windowed CHR is
+        comparable across baseline and fault runs."""
+        self._push(t, "probe", fn)
+
     def run(self, max_time: float = 1e7) -> SimResult:
         for j in self.suite.jobs:
             self._push(j.submit_time, "job_start", j.job_id)
         self._push(5.0, "tick", None)
         if self.stop_job_at is not None:
             self._push(self.stop_job_at[1], "stop_job", self.stop_job_at[0])
+        for t, kind, sid in self.chaos_events:
+            self._push(t, "chaos", (kind, sid))
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             if t > max_time:
@@ -161,13 +180,27 @@ class ClusterSim:
                     self._push(self.now + 5.0, "tick", None)
             elif kind == "stop_job":
                 self._stopped.add(payload)
+            elif kind == "chaos":
+                self._strike(*payload)
+            elif kind == "probe":
+                payload(self)
         jct = {jid: t - self._jobs[jid].submit_time
                for jid, t in self._done.items()}
+        if self._chaos is not None:       # never leave a worker wedged
+            self._chaos.resume_all()
         util = self.link.busy_time / max(1e-9, self.now)
         return SimResult(jct=jct, hit_ratio=self.engine.hit_ratio(),
                          stats=self.engine.snapshot(), makespan=self.now,
                          link_utilization=util, step_trace=self._step_trace,
-                         alloc_trace=self._alloc_trace)
+                         alloc_trace=self._alloc_trace,
+                         chaos_log=self._chaos_log)
+
+    def _strike(self, kind: str, sid: int) -> None:
+        if self._chaos is None:
+            from .chaos import ChaosMonkey
+            self._chaos = ChaosMonkey(self.engine)
+        self._chaos.strike(kind, sid)
+        self._chaos_log.append({"t": self.now, "kind": kind, "sid": sid})
 
     # ----------------------------------------------------------------- steps
     def _start_step(self, jid: int) -> None:

@@ -8,7 +8,8 @@ ranged/batched ``BackingStore`` v2 protocol for the client; legacy
 one-method ``fetch_block`` stores keep working through
 ``as_backing_store``.  See docs/API.md "Storage API".
 """
-from .api import (BackingStore, FaultyStore, LegacyStoreAdapter, MemStore,
+from .api import (BackingStore, CircuitBreaker, CircuitOpenError,
+                  DeadlineError, FaultyStore, LegacyStoreAdapter, MemStore,
                   RetryPolicy, StoreCapabilities, StoreError, StoreMetaIndex,
                   TransientStoreError, as_backing_store, open_store,
                   register_scheme, registered_schemes)
@@ -17,7 +18,8 @@ from .local_fs import LocalFSStore
 from .object_store import ObjectStoreSim, RemoteStore, TransferModel
 
 __all__ = [
-    "BackingStore", "DatasetSpec", "FaultyStore", "LegacyStoreAdapter",
+    "BackingStore", "CircuitBreaker", "CircuitOpenError", "DatasetSpec",
+    "DeadlineError", "FaultyStore", "LegacyStoreAdapter",
     "LocalFSStore", "MemStore", "ObjectStoreSim", "RemoteStore",
     "RetryPolicy", "StoreCapabilities", "StoreError", "StoreMetaIndex",
     "TransferModel", "TransientStoreError", "as_backing_store",

@@ -46,7 +46,8 @@ import numpy as np
 from ..core.types import MB, PathT, block_key, split_block_key
 
 __all__ = [
-    "BackingStore", "FaultyStore", "LegacyStoreAdapter", "MemStore",
+    "BackingStore", "CircuitBreaker", "CircuitOpenError", "DeadlineError",
+    "FaultyStore", "LegacyStoreAdapter", "MemStore",
     "RangeRequest", "RetryPolicy", "StoreCapabilities", "StoreError",
     "StoreMetaIndex", "TransientStoreError", "as_backing_store",
     "open_store", "register_scheme", "registered_schemes",
@@ -73,6 +74,109 @@ class TransientStoreError(StoreError):
     past the bound the error propagates like a permanent one."""
 
 
+class DeadlineError(StoreError):
+    """The caller's time budget ran out before the fetch succeeded.
+
+    Raised by :meth:`RetryPolicy.call` when ``deadline_s`` is set and the
+    next retry (or the attempt just finished) would land past the budget.
+    Permanent by design: a reader blocked on a sick store gets a fast,
+    typed error instead of an unbounded wait — it can then fall back
+    (degraded read) or surface the failure."""
+
+
+class CircuitOpenError(TransientStoreError):
+    """Fast-failed by an OPEN circuit breaker: the store has been failing
+    consecutively and callers are short-circuited until the half-open
+    probe window.  Transient by taxonomy (the breaker will half-open),
+    but :class:`RetryPolicy` does **not** retry it — retrying against an
+    open breaker is exactly the hammering the breaker exists to stop."""
+
+
+class CircuitBreaker:
+    """Per-store circuit breaker: CLOSED → OPEN after ``threshold``
+    *consecutive* transient failures, OPEN → HALF_OPEN after
+    ``reset_s``, HALF_OPEN → CLOSED on one success (or back to OPEN on
+    failure).
+
+    Only transient failures count (permanent errors already fail fast
+    and retrying cannot help, so they carry no load signal).  While OPEN,
+    ``before_call`` raises :class:`CircuitOpenError` immediately —
+    callers get a fast error instead of burning their deadline against a
+    store that has been failing for everyone.  In HALF_OPEN exactly one
+    caller at a time is let through as the probe.
+
+    Thread-safe; ``clock`` is injectable for virtual-time tests.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int = 5, reset_s: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = threshold
+        self.reset_s = reset_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._failures = 0            # consecutive transient failures
+        self._state = self.CLOSED
+        self._opened_at = 0.0
+        self._probing = False         # half-open: one probe in flight
+        self.trips = 0                # times the breaker opened
+        self.fast_failures = 0        # calls short-circuited while open
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._peek_state()
+
+    def _peek_state(self) -> str:
+        if (self._state == self.OPEN
+                and self.clock() - self._opened_at >= self.reset_s):
+            return self.HALF_OPEN
+        return self._state
+
+    def before_call(self) -> None:
+        """Admission check: raises :class:`CircuitOpenError` while OPEN;
+        in HALF_OPEN admits a single probe and fast-fails the rest."""
+        with self._lock:
+            state = self._peek_state()
+            if state == self.CLOSED:
+                return
+            if state == self.HALF_OPEN and not self._probing:
+                self._state = self.HALF_OPEN
+                self._probing = True
+                return
+            self.fast_failures += 1
+            raise CircuitOpenError(
+                f"circuit breaker open ({self._failures} consecutive "
+                f"transient failures; retry after {self.reset_s}s)")
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._state = self.CLOSED
+            self._probing = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            self._probing = False
+            if self._state == self.HALF_OPEN or \
+                    self._failures >= self.threshold:
+                if self._state != self.OPEN:
+                    self.trips += 1
+                self._state = self.OPEN
+                self._opened_at = self.clock()
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"state": self._peek_state(),
+                    "consecutive_failures": self._failures,
+                    "trips": self.trips,
+                    "fast_failures": self.fast_failures}
+
+
 @dataclass
 class RetryPolicy:
     """Bounded retry + exponential backoff for transient store errors.
@@ -81,31 +185,70 @@ class RetryPolicy:
     :class:`StoreError` and unrelated exceptions propagate immediately.
     ``sleep`` is injectable so tests (and virtual-clock callers) retry
     without wall-clock delay.
+
+    ``deadline_s`` is the *total* time budget across all attempts: when
+    set, an attempt is never started (and a backoff never slept) past
+    ``start + deadline_s`` — the call raises :class:`DeadlineError`
+    instead, so a hanging or endlessly-flaky store costs a bounded wait.
+    ``breaker`` (a :class:`CircuitBreaker`, also overridable per call)
+    is consulted before and after every attempt: an OPEN breaker fails
+    the call immediately with :class:`CircuitOpenError` (never retried).
     """
 
     max_attempts: int = 3
     backoff_s: float = 0.005
     multiplier: float = 2.0
     max_backoff_s: float = 0.5
+    deadline_s: Optional[float] = None
     sleep: Callable[[float], None] = field(default=time.sleep, repr=False)
+    clock: Callable[[], float] = field(default=time.monotonic, repr=False)
+    breaker: Optional[CircuitBreaker] = field(default=None, repr=False)
 
     def call(self, fn: Callable, *args,
-             on_retry: Optional[Callable[[int, BaseException], None]] = None):
+             on_retry: Optional[Callable[[int, BaseException], None]] = None,
+             breaker: Optional[CircuitBreaker] = None,
+             deadline_s: Optional[float] = None):
         """Run ``fn(*args)``, retrying transient failures.  ``on_retry``
         (attempt number, error) fires before each re-attempt — the
-        executor's retry accounting hooks in there."""
+        executor's retry accounting hooks in there.  ``breaker`` /
+        ``deadline_s`` override the policy's own when given."""
+        breaker = breaker if breaker is not None else self.breaker
+        budget = deadline_s if deadline_s is not None else self.deadline_s
+        deadline = None if budget is None else self.clock() + budget
         delay = self.backoff_s
         attempts = max(1, self.max_attempts)
         for attempt in range(1, attempts + 1):
+            if breaker is not None:
+                breaker.before_call()      # CircuitOpenError: never retried
             try:
-                return fn(*args)
+                result = fn(*args)
+            except CircuitOpenError:
+                raise                      # a nested breaker fast-failed
             except TransientStoreError as e:
+                if breaker is not None:
+                    breaker.record_failure()
                 if attempt >= attempts:
                     raise
+                if deadline is not None and \
+                        self.clock() + delay >= deadline:
+                    raise DeadlineError(
+                        f"retry budget ({budget}s) exhausted after "
+                        f"{attempt} attempt(s): {e}") from e
                 if on_retry is not None:
                     on_retry(attempt, e)
                 self.sleep(delay)
                 delay = min(delay * self.multiplier, self.max_backoff_s)
+            else:
+                if breaker is not None:
+                    breaker.record_success()
+                if deadline is not None and self.clock() > deadline:
+                    # the attempt itself blew the budget (hung store):
+                    # the caller asked for a bounded wait, so a late
+                    # success still reports the deadline breach — but the
+                    # data is here, so return it (the *next* call against
+                    # the still-sick store is the breaker's job).
+                    return result
+                return result
 
 
 # ---------------------------------------------------------------------------
@@ -367,10 +510,26 @@ class FaultyStore(BackingStore):
     Metadata calls pass through untouched, so the wrapped store still
     backs the kernel.  Injection counters (``injected_transient`` /
     ``injected_permanent``) make retry-accounting tests exact.
+
+    Chaos modes for the fault harness:
+
+    * ``hang_rate`` / ``hang_s`` — with probability ``hang_rate`` a fetch
+      stalls for ``hang_s`` before delegating: a *bounded* hang, so a
+      deadline-less caller is slow, not stuck forever, and tests never
+      truly wedge.  A caller with ``RetryPolicy.deadline_s < hang_s``
+      observes the stall as a deadline breach.
+    * ``slow_s`` — constant latency added to every fetch (a uniformly
+      sick store rather than a lottery).
+    * ``corrupt_rate`` — the fetch succeeds but the payload comes back
+      bit-flipped (XOR 0xFF), for end-to-end checksum/validation paths.
+
+    Counters: ``injected_hangs``, ``injected_corrupt``.
     """
 
     def __init__(self, inner, *, fail_rate: float = 0.0,
                  permanent_rate: float = 0.0, jitter_s: float = 0.0,
+                 hang_rate: float = 0.0, hang_s: float = 0.0,
+                 slow_s: float = 0.0, corrupt_rate: float = 0.0,
                  seed: int = 0,
                  sleep: Callable[[float], None] = time.sleep) -> None:
         backing = as_backing_store(inner)
@@ -382,11 +541,17 @@ class FaultyStore(BackingStore):
         self.fail_rate = fail_rate
         self.permanent_rate = permanent_rate
         self.jitter_s = jitter_s
+        self.hang_rate = hang_rate
+        self.hang_s = hang_s
+        self.slow_s = slow_s
+        self.corrupt_rate = corrupt_rate
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()   # Generator + counters: not MT-safe
         self._sleep = sleep
         self.injected_transient = 0
         self.injected_permanent = 0
+        self.injected_hangs = 0
+        self.injected_corrupt = 0
 
     def capabilities(self) -> StoreCapabilities:
         return self._backing.capabilities()
@@ -403,14 +568,21 @@ class FaultyStore(BackingStore):
         self.__dict__.update(state)
         self._lock = threading.Lock()
 
-    def _roll(self, what: str) -> None:
+    def _roll(self, what: str) -> bool:
         # concurrent shard workers + readers all fetch through here —
         # draw and count under one lock so the injection counters stay
-        # exact (the retry-accounting tests equate them to stats.retries)
+        # exact (the retry-accounting tests equate them to stats.retries).
+        # Returns whether this fetch's payload should come back corrupt.
         with self._lock:
             r = self._rng.random()
             jitter = (float(self._rng.exponential(self.jitter_s))
                       if self.jitter_s > 0.0 else 0.0)
+            hang = (self.hang_rate > 0.0 and self.hang_s > 0.0
+                    and self._rng.random() < self.hang_rate)
+            corrupt = (self.corrupt_rate > 0.0
+                       and self._rng.random() < self.corrupt_rate)
+            if hang:
+                self.injected_hangs += 1
             if r < self.permanent_rate:
                 self.injected_permanent += 1
                 raise StoreError(f"injected permanent failure on {what}")
@@ -418,13 +590,24 @@ class FaultyStore(BackingStore):
                 self.injected_transient += 1
                 raise TransientStoreError(
                     f"injected transient failure on {what}")
-        if jitter:
-            self._sleep(jitter)
+            if corrupt:
+                self.injected_corrupt += 1
+        stall = self.slow_s + jitter + (self.hang_s if hang else 0.0)
+        if stall:
+            self._sleep(stall)
+        return corrupt
+
+    @staticmethod
+    def _mangle(data: np.ndarray) -> np.ndarray:
+        # bit-flip every byte: unambiguous corruption that any checksum
+        # (or byte-equality assertion) catches, with the right length
+        return np.bitwise_xor(np.asarray(data, dtype=np.uint8), 0xFF)
 
     def fetch_range(self, path: PathT, offset: int,
                     length: int) -> np.ndarray:
-        self._roll("/".join(path))
-        return self._backing.fetch_range(path, offset, length)
+        corrupt = self._roll("/".join(path))
+        data = self._backing.fetch_range(path, offset, length)
+        return self._mangle(data) if corrupt else data
 
     def fetch_many(self, requests: Sequence[RangeRequest]
                    ) -> List[np.ndarray]:
@@ -494,7 +677,8 @@ def open_store(uri: str, **overrides):
     * ``mem://`` — empty :class:`MemStore` (query: ``block_size``).
     * ``faulty+<scheme>://...`` — the inner scheme's store wrapped in a
       :class:`FaultyStore`; query params configure the injector
-      (``fail_rate``, ``permanent_rate``, ``jitter_s``, ``seed``).
+      (``fail_rate``, ``permanent_rate``, ``jitter_s``, ``hang_rate``,
+      ``hang_s``, ``slow_s``, ``corrupt_rate``, ``seed``).
 
     ``overrides`` win over query params.  Unknown schemes raise
     ``ValueError`` listing what is registered.
@@ -509,8 +693,9 @@ def open_store(uri: str, **overrides):
     if url.scheme.startswith("faulty+"):
         inner_uri = urlunsplit((url.scheme[len("faulty+"):], url.netloc,
                                 url.path, "", ""))
-        fault_keys = ("fail_rate", "permanent_rate", "jitter_s", "seed",
-                      "sleep")
+        fault_keys = ("fail_rate", "permanent_rate", "jitter_s",
+                      "hang_rate", "hang_s", "slow_s", "corrupt_rate",
+                      "seed", "sleep")
         fault_kw = {k: params.pop(k) for k in fault_keys if k in params}
         inner = open_store(inner_uri, **params)
         return FaultyStore(inner, **fault_kw)

@@ -21,6 +21,7 @@ this module is the *policy* layer above it.
 from __future__ import annotations
 
 import signal
+import threading
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
@@ -29,16 +30,29 @@ from typing import Callable, Dict, List, Optional, Set
 
 @dataclass
 class Heartbeat:
+    """Per-worker liveness with a deadline.
+
+    Thread-safe: the cache driver's supervisor polls ``dead_workers``
+    from its own thread while per-channel receiver threads ``beat`` —
+    the beat map is snapshotted under a lock so concurrent beats never
+    race the scan (it is also the training driver's single-threaded
+    liveness tracker, which the lock leaves untouched semantically).
+    """
+
     deadline_s: float = 60.0
     last_beat: Dict[int, float] = field(default_factory=dict)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def beat(self, worker: int, now: Optional[float] = None) -> None:
-        self.last_beat[worker] = now if now is not None else time.time()
+        with self._lock:
+            self.last_beat[worker] = now if now is not None else time.time()
 
     def dead_workers(self, now: Optional[float] = None) -> List[int]:
         now = now if now is not None else time.time()
-        return [w for w, t in self.last_beat.items()
-                if now - t > self.deadline_s]
+        with self._lock:
+            items = list(self.last_beat.items())
+        return [w for w, t in items if now - t > self.deadline_s]
 
 
 class StragglerDetector:

@@ -536,6 +536,79 @@ def test_bad_executor_string_does_not_leak_workers():
     assert not leaked, f"leaked workers: {leaked}"
 
 
+# ---------------------------------------------------------------------------
+# fault-supervision regressions (satellites of the robustness tentpole)
+# ---------------------------------------------------------------------------
+
+def test_worker_death_during_executor_close_keeps_identity():
+    """Regression for the _fail_channel stats race: a worker dying while
+    ProcessExecutor.close() is draining must not double-count or drop
+    the dead channel's queued candidates — both paths drain atomically
+    through the channel and account under the registration lock, so the
+    identity holds no matter who wins."""
+    for seed in (1, 2):
+        store = mk_flat_store()
+        slow = FaultyStore(store, jitter_s=0.002, seed=seed)
+        client = open_cache(slow, 64 * MB, cfg=CFG, driver="process",
+                            n_procs=2, max_fetch_bytes=512)
+        _drive_client(client, store)
+        st = client.executor.stats
+        assert st.submitted > 0
+        # SIGKILL one worker and close immediately: the receiver thread's
+        # death accounting races the executor's close-time drain
+        client.engine._channels[seed % 2].proc.kill()
+        client.close()
+        assert executor_identity(st) == st.submitted, st.snapshot()
+
+
+def test_driver_flush_returns_promptly_after_worker_death():
+    """flush() on a driver whose worker died with queued background work
+    must return promptly — the dead channel's queue is drained by the
+    death accounting (supervision off: nothing refills it), so the call
+    must not sleep out its full timeout waiting for progress that can
+    never happen."""
+    import time as _time
+    store = mk_flat_store()
+    slow = FaultyStore(store, jitter_s=0.002, seed=4)
+    client = open_cache(slow, 64 * MB, cfg=CFG, driver="process",
+                        n_procs=2, max_fetch_bytes=512, supervise=False)
+    _drive_client(client, store)
+    for ch in client.engine._channels:
+        ch.proc.kill()
+    t0 = _time.monotonic()
+    client.engine.flush(timeout=30.0)
+    elapsed = _time.monotonic() - t0
+    assert elapsed < 10.0, (
+        f"flush slept {elapsed:.1f}s against a dead channel")
+    client.close()
+
+
+def test_shard_channel_wait_idle_reports_closed_promptly():
+    """A closed channel with outstanding work can only drain through the
+    death sweep — wait_idle must report False immediately, not burn the
+    caller's timeout."""
+    import time as _time
+    from repro.core.procdriver import _ShardChannel
+    ch = _ShardChannel(0, None, None)
+    ch.outstanding = 3
+    ch.closed = True
+    t0 = _time.monotonic()
+    assert ch.wait_idle(30.0) is False
+    assert _time.monotonic() - t0 < 1.0
+
+
+def test_client_shard_queue_wait_idle_reports_closed_promptly():
+    """Same contract for the ThreadedExecutor's per-shard queue."""
+    import time as _time
+    from repro.core.client import _ShardQueue
+    q = _ShardQueue(depth=8)
+    q.outstanding = 2
+    q.closed = True
+    t0 = _time.monotonic()
+    assert q.wait_idle(30.0) is False
+    assert _time.monotonic() - t0 < 1.0
+
+
 def test_backing_override_reaches_workers():
     """An explicit `backing` store must be what the *workers* fetch
     demand bytes from — a permanently failing backing proves they do

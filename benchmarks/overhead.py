@@ -12,10 +12,15 @@ printed as CSV rows and persisted to ``BENCH_overhead.json`` so the perf
 trajectory is tracked across PRs.  ``--smoke`` runs a single down-scaled
 configuration in a couple of seconds for the test job.
 
-``--shards 1,4`` (the default) additionally measures the path-hash sharded
-facade (``ShardedIGTCache``) at the 10k cap over an 8-dataset layout, with
-the shard counts interleaved run-by-run so the pair is same-protocol
-comparable; the points land in the JSON's ``sharded`` section.
+``--shards 1,4,8,16`` (the default) additionally measures the path-hash
+sharded facade (``ShardedIGTCache``) at the 10k cap over an 8-dataset
+layout, with the shard counts interleaved run-by-run so the set is
+same-protocol comparable; the points land in the JSON's ``sharded``
+section.  The same shard counts (>1) drive the ``rebalance_path`` axis:
+the scaled paper-suite cluster sim per shard count under both
+``quantum_policy`` settings, recording CHR gap vs unsharded, summary
+bytes/round shipped by the sketch-based demand summaries, and
+rounds-to-converge (the round after which the planner goes quiet).
 
 ``--procs 1,2,4`` (the default) measures the **multi-process shard
 driver** (``core.procdriver.ProcessShardedCache``) on a batched
@@ -268,7 +273,7 @@ def measure_procs(proc_counts, node_cap: int, n_accesses: int, seed: int,
 
 
 def main(scale: float = 1.0, seed: int = 0, smoke: bool = False,
-         json_path=None, shard_counts=(1, 4), proc_counts=(1, 2, 4)):
+         json_path=None, shard_counts=(1, 4, 8, 16), proc_counts=(1, 2, 4)):
     caps = (10_000,) if smoke else (100, 1000, 10_000, 100_000)
     n_accesses = 6_000 if smoke else 30_000
     repeats = 2 if smoke else 3
@@ -342,6 +347,85 @@ def main(scale: float = 1.0, seed: int = 0, smoke: bool = False,
         rows.extend(run_proc_axis(tuple(proc_counts), seed=seed,
                                   smoke=smoke,
                                   json_path=json_path or out_path))
+    # ---- cross-shard rebalance axis (cluster sim, both policies) ------
+    reb_counts = tuple(n for n in shard_counts if n > 1)
+    if reb_counts:
+        rows.extend(run_rebalance_axis(reb_counts, seed=seed, smoke=smoke,
+                                       json_path=json_path or out_path))
+    return rows
+
+
+def run_rebalance_axis(shard_counts=(4, 8, 16), seed: int = 0,
+                       smoke: bool = False, json_path=None):
+    """Measure + record the ``rebalance_path`` section: the scaled
+    paper-suite cluster sim (the tier-1 convergence scenario) per shard
+    count under both move-sizing policies, against one unsharded
+    reference run.  Reported per configuration:
+
+    * ``chr`` / ``chr_gap_pp`` — block hit ratio and its gap vs the
+      unsharded engine (positive = sharded worse);
+    * ``rounds`` / ``rounds_to_converge`` — cross-shard rounds run, and
+      the (1-based) index of the last round that still moved bytes —
+      after it the planner is quiet, i.e. converged;
+    * ``summary_bytes_round_max/mean`` — wire size of all shards'
+      demand summaries per round (exact top-k rows + CMS/SpaceSaving
+      payloads), the number that must stay O(KB)/shard;
+    * ``moves`` / ``bytes_moved_mb`` — total planner activity.
+    """
+    from repro.sim import ClusterSim, make_paper_suite
+
+    scale = 0.08 if smoke else 0.15
+    if smoke:
+        shard_counts = shard_counts[:1]
+    suite = make_paper_suite(scale=scale, seed=seed,
+                             job_filter=[2, 8, 9, 14, 16])
+    store = RemoteStore()
+    for ds in suite.datasets.values():
+        store.add(ds)
+    cap = int(0.35 * suite.total_bytes())
+
+    def sim_cfg(policy):
+        share = max(16 * MB, cap // 128)
+        return CacheConfig(min_share=share, rebalance_quantum=share,
+                           rebalance_period=10.0,
+                           prefetch_budget_bytes=max(64 * MB, cap // 8),
+                           quantum_policy=policy)
+
+    mono = ClusterSim(suite, IGTCache(store, cap, cfg=sim_cfg("adaptive"))
+                      ).run()
+    rows = []
+    section = {"smoke": smoke, "scale": scale,
+               "unsharded_chr": round(mono.hit_ratio, 4)}
+    for n in shard_counts:
+        for policy in ("adaptive", "fixed"):
+            eng = ShardedIGTCache(store, cap, cfg=sim_cfg(policy),
+                                  n_shards=n)
+            res = ClusterSim(suite, eng).run()
+            trace = res.rebalance_trace
+            sb = [r["summary_bytes"] for r in trace]
+            active = [i for i, r in enumerate(trace) if r["moves"]]
+            key = f"{policy}_{n}"
+            section[key] = {
+                "chr": round(res.hit_ratio, 4),
+                "chr_gap_pp": round(
+                    (mono.hit_ratio - res.hit_ratio) * 100, 2),
+                "rounds": len(trace),
+                "rounds_to_converge": (active[-1] + 1) if active else 0,
+                "moves": sum(r["moves"] for r in trace),
+                "bytes_moved_mb": round(
+                    sum(r["bytes_moved"] for r in trace) / 2**20, 1),
+                "summary_bytes_round_max": max(sb, default=0),
+                "summary_bytes_round_mean": (round(sum(sb) / len(sb), 1)
+                                             if sb else 0),
+            }
+            rows.append(csv_row(
+                f"rebalance_path.{key}.chr_gap_pp",
+                section[key]["chr_gap_pp"],
+                f"chr={section[key]['chr']} "
+                f"rounds_to_converge={section[key]['rounds_to_converge']} "
+                f"summary_bytes_max={section[key]['summary_bytes_round_max']}"
+            ))
+    merge_overhead_section("rebalance_path", section, json_path=json_path)
     return rows
 
 
@@ -388,9 +472,10 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="single down-scaled configuration for the test job")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--shards", default="1,4",
+    ap.add_argument("--shards", default="1,4,8,16",
                     help="comma-separated shard counts for the sharded-"
-                         "facade axis ('' disables it)")
+                         "facade axis and (counts >1) the rebalance_path "
+                         "axis ('' disables both)")
     ap.add_argument("--procs", default="1,2,4",
                     help="comma-separated worker counts for the multi-"
                          "process driver axis ('' disables it); the "

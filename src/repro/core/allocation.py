@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, TYPE_CHECKING
+from typing import Callable, Dict, List, Optional, TYPE_CHECKING
 
 from .types import CacheConfig, Pattern
 
@@ -49,6 +49,10 @@ class BufferWindow:
         self.probes = 0
         self.total_hits = 0
         self.total_probes = 0
+        # optional ghost-hit sink (core.sketch.DemandSketch.note): the
+        # pool wires every CMU's window into its per-shard demand sketch
+        # so the cross-shard round can size unmet working sets
+        self.sink: Optional[Callable[[str], None]] = None
 
     def on_evict(self, key: str) -> None:
         self._ghost[key] = None
@@ -64,6 +68,8 @@ class BufferWindow:
             self.hits += 1
             self.total_hits += 1
             del self._ghost[key]
+            if self.sink is not None:
+                self.sink(key)
             return True
         return False
 

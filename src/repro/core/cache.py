@@ -24,6 +24,7 @@ import numpy as np
 from .allocation import BufferWindow
 from .eviction import (ARC, EagerEviction, EvictionPolicy, LRU, UniformCache,
                        make_policy)
+from .sketch import DemandSketch
 from .types import CacheConfig, CacheStats, PathT, Pattern
 
 BlockKey = str
@@ -348,9 +349,14 @@ class UnifiedCache:
         # bumped whenever the CMU registry changes; read-path caches of
         # path→CMU resolutions key their validity on it (§4 batched read)
         self.cmu_gen = 0
+        # per-pool ghost-hit heat (core.sketch): every CMU's BufferWindow
+        # sinks its ghost hits here so the cross-shard allocation round
+        # can size unmet working sets from a bounded summary
+        self.demand_sketch = DemandSketch(self.cfg)
         self.default_cmu = CacheManageUnit(
             self.DEFAULT, capacity, self.cfg,
             on_evict=self._cmu_evicted, dataset_bytes=0)
+        self.default_cmu.buffer_window.sink = self.demand_sketch.note
         self.cmus[self.DEFAULT] = self.default_cmu
 
     # -- bookkeeping hooks ------------------------------------------------------
@@ -388,6 +394,7 @@ class UnifiedCache:
         cmu = CacheManageUnit(root_path, 0, self.cfg,
                               on_evict=self._cmu_evicted,
                               dataset_bytes=dataset_bytes)
+        cmu.buffer_window.sink = self.demand_sketch.note
         cmu.created_at = now
         prefix = path_key(root_path) + "/"
         moved_bytes = 0

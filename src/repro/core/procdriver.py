@@ -76,7 +76,7 @@ from .faults import (RestartBudget, SHARD_DOWN, SHARD_RESTARTING, SHARD_UP,
 from .igtcache import EngineOptions, IGTCache, ReadOutcome
 from .meta import StoreMeta
 from .sharded import (DemandSummary, GlobalRebalancer, ShardDemandTracker,
-                      ShardRouting, split_capacity)
+                      ShardRouting, ShardSummary, split_capacity)
 from .types import CacheConfig, CacheStats, MB, PathT, Pattern
 
 __all__ = ["ProcessExecutor", "ProcessShardedCache", "ShmArena",
@@ -366,8 +366,11 @@ def _dispatch(state: _WorkerState, kernel: IGTCache, op: str, payload):
         kernel.tick(payload)
         return None
     if op == "rebalance_summary":
-        return [row for row, _ in
-                state.tracker.summarize(kernel, state.sid, payload)]
+        # summarize() builds the bounded wire ShardSummary (exact rows
+        # for the default + top-k CMUs, sketch payloads for the block
+        # heat) as a side effect — ship that, not the raw row list
+        state.tracker.summarize(kernel, state.sid, payload)
+        return state.tracker.summaries[state.sid]
     if op == "rebalance_apply":
         return _op_apply_alloc(kernel, *payload)
     if op == "stats":
@@ -1292,7 +1295,11 @@ class ProcessShardedCache(ShardRouting):
     def tick(self, now: float) -> None:
         """Per-shard maintenance plus, when due, the cross-shard round
         over the workers' serialized demand summaries.  Down/restarting
-        shards are skipped — maintenance must not poison the callers."""
+        shards are skipped — maintenance must not poison the callers.
+        Unlike the in-process facade there is no starvation-triggered
+        early round (spotting a sub-min-share CMU would cost an RPC
+        sweep per tick); the retrying floor top-up inside the planner
+        still repairs starvation on the next periodic round."""
         if (self.n_shards > 1 and self.options.allocation == "adaptive"
                 and self.global_rebalancer.due(now)):
             self.rebalance_now(now)
@@ -1308,11 +1315,13 @@ class ProcessShardedCache(ShardRouting):
         number of quantum moves applied."""
         reb = self.global_rebalancer
         reb.last_round = now
-        rows: List[DemandSummary] = []
-        for got in self._broadcast("rebalance_summary", now,
-                                   tolerant=True):
-            rows.extend(got)
+        summaries: List[ShardSummary] = [
+            got for got in self._broadcast("rebalance_summary", now,
+                                           tolerant=True)
+            if got is not None]
+        rows: List[DemandSummary] = [r for s in summaries for r in s.rows]
         moves = reb.plan_moves(rows)
+        reb.note_round(now, summaries, moves)
         if not moves:
             return 0
         shrinks: Dict[int, List[Tuple[PathT, int]]] = {}

@@ -27,14 +27,16 @@ capacity, every call forwards to it, and the global layer stays inert.
 """
 from __future__ import annotations
 
+import math
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .allocation import DemandEstimate, Rebalancer, marginal_benefit
-from .cache import CacheManageUnit
+from .cache import CacheManageUnit, path_key
 from .igtcache import EngineOptions, IGTCache, ReadOutcome
 from .meta import StoreMeta
+from .sketch import CountMinSketch, SpaceSaving
 from .types import CacheConfig, CacheStats, PathT, Pattern
 
 
@@ -113,6 +115,13 @@ class DemandSummary:
     enough state to re-evaluate ``wants_more`` after a mid-round quota
     move (RANDOM streams stop wanting at ``dataset_bytes``); patterns
     whose demand does not depend on quota leave it ``None``.
+
+    ``want``/``floor``/``free`` are the adaptive planner's sizing
+    fields (``quantum_policy="adaptive"``): ``want`` is the measured
+    unmet demand in bytes (sketch-derived for SKEWED streams), ``floor``
+    the pattern-aware minimum quota below which the stream starves, and
+    ``free`` the bytes the CMU could donate without evicting anything.
+    The fixed-quantum planner ignores them.
     """
 
     shard: int                 # owning shard index
@@ -121,8 +130,46 @@ class DemandSummary:
     wants_more: bool           # unmet demand at current quota
     can_take: bool             # workload CMU; shard defaults only donate
     quota: int
-    headroom: int              # quota - min_share (donatable bytes)
+    headroom: int              # donatable bytes (see tracker._row)
     demand_limit: Optional[float] = None   # wants_more := quota < limit
+    want: int = 0              # unmet demand, bytes (adaptive sizing)
+    floor: int = 0             # pattern-aware minimum quota
+    free: int = 0              # quota - used (donatable without eviction)
+
+
+# Rough per-row wire cost (fixed fields as packed ints/floats + framing);
+# used only for the summary-bytes accounting in rebalance stats.
+_ROW_OVERHEAD = 64
+
+
+@dataclass
+class ShardSummary:
+    """One shard's complete demand summary for a cross-shard round.
+
+    Exact :class:`DemandSummary` rows are shipped only for the shard's
+    default CMU plus the top ``cfg.topk`` workload CMUs (ranked by
+    unmet demand + donatable headroom); the remainder is aggregated
+    into the ``tail_*`` counters, and the per-block heat detail rides
+    in the two O(KB) sketch payloads (``core.sketch``).  Total payload
+    is therefore bounded regardless of how many CMUs or distinct
+    blocks the shard serves.
+    """
+
+    shard: int
+    rows: List[DemandSummary] = field(default_factory=list)
+    n_cmus: int = 0            # workload CMUs on the shard
+    tail_cmus: int = 0         # workload CMUs beyond the exact-row cap
+    tail_quota: int = 0
+    tail_want: int = 0
+    ghost_mass: int = 0        # ghost hits folded this interval
+    cms_payload: bytes = b""   # serialized CountMinSketch (block heat)
+    topk_payload: bytes = b""  # serialized SpaceSaving (heavy hitters)
+
+    def payload_bytes(self) -> int:
+        rows_cost = sum(len("/".join(r.key)) + _ROW_OVERHEAD
+                        for r in self.rows)
+        return (len(self.cms_payload) + len(self.topk_payload)
+                + rows_cost + 48)
 
 
 class GlobalRebalancer(Rebalancer):
@@ -150,6 +197,17 @@ class GlobalRebalancer(Rebalancer):
     def __init__(self, cfg: CacheConfig) -> None:
         super().__init__(cfg)
         self.tracker = ShardDemandTracker(cfg)
+        # (donor rkey, taker rkey) pairs of the previous round — the
+        # adaptive planner refuses to reverse a fresh flow (ping-pong
+        # damping beyond scalar hysteresis, needed once moves are
+        # demand-sized rather than one-quantum)
+        self._flow: set = set()
+        # per-round stats, newest last (bounded); SimResult surfaces these
+        self.round_log: List[dict] = []
+        self.last_stats: Optional[dict] = None
+        # cluster-wide heat view merged from the shards' shipped sketches
+        self.cluster_heat: Optional[CountMinSketch] = None
+        self.cluster_hot: Optional[SpaceSaving] = None
 
     def _estimate(self, cmu: CacheManageUnit, now: float) -> DemandEstimate:
         return self.tracker.estimate(cmu, now)
@@ -157,13 +215,27 @@ class GlobalRebalancer(Rebalancer):
     def plan_moves(self, rows: Sequence[DemandSummary],
                    max_moves: Optional[int] = None
                    ) -> List[Tuple[DemandSummary, DemandSummary, int]]:
-        """The paper's greedy max-B ← min-B rule over serialized demand
-        rows — pure planning, no engine access.  Both drivers run this:
-        the in-process facade applies the returned moves to live CMUs,
-        the process driver ships them to workers as quota/capacity
-        deltas.  Rows are mutated in place (quota, headroom,
-        ``wants_more`` via ``demand_limit``) so successive moves see the
-        post-move state, exactly like the live-object round did."""
+        """Plan one cross-shard round over serialized demand rows — pure
+        planning, no engine access.  Both drivers run this: the
+        in-process facade applies the returned moves to live CMUs, the
+        process driver ships them to workers as quota/capacity deltas.
+        Rows are mutated in place (quota, headroom, ``want``,
+        ``wants_more`` via ``demand_limit``) so successive moves see
+        the post-move state, exactly like a live-object round would.
+
+        ``cfg.quantum_policy`` selects the planner: ``"adaptive"``
+        (default) sizes each move by the taker's measured unmet demand
+        with pattern-aware floors; ``"fixed"`` is the legacy
+        one-quantum-per-move greedy loop, kept verbatim for comparison
+        (the ``rebalance_path`` benchmark axis measures both)."""
+        if self.cfg.quantum_policy == "fixed":
+            return self._plan_moves_fixed(rows, max_moves)
+        return self._plan_moves_adaptive(rows, max_moves)
+
+    def _plan_moves_fixed(self, rows: Sequence[DemandSummary],
+                          max_moves: Optional[int] = None
+                          ) -> List[Tuple[DemandSummary, DemandSummary, int]]:
+        """The paper's greedy max-B ← min-B rule, one quantum per move."""
         moves: List[Tuple[DemandSummary, DemandSummary, int]] = []
         if not rows or len({r.shard for r in rows}) < 2:
             return moves
@@ -195,27 +267,208 @@ class GlobalRebalancer(Rebalancer):
             moves.append((donor, taker, amt))
         return moves
 
+    def _plan_moves_adaptive(self, rows: Sequence[DemandSummary],
+                             max_moves: Optional[int] = None
+                             ) -> List[Tuple[DemandSummary, DemandSummary,
+                                             int]]:
+        """Demand-sized planning: two phases.
+
+        Phase 1 (floor top-up, hysteresis-exempt): any workload CMU
+        below its pattern floor is starving — born after the shard
+        defaults drained, or an active sequential stream squeezed below
+        its prefetch window — and is topped up from the lowest-benefit
+        donors regardless of benefit ordering.  Retried every round, so
+        a top-up that finds no donor today succeeds when capacity
+        frees up (one-shot seeding provably strands CMUs).
+
+        Phase 2 (want-sized moves): the greedy max-B ← min-B rule, but
+        each move carries ``min(taker.want, donor budget)`` instead of
+        one fixed quantum, so convergence no longer needs O(gap/quantum)
+        rounds as shard count grows.  A donor's budget is its free
+        (unused) bytes plus a forced-eviction allowance that scales
+        with the benefit gap and shard count and vanishes near
+        convergence — the adaptive quantum.  Fresh donor→taker flows
+        from the previous round must not reverse this round (cooldown),
+        which replaces the one-quantum loop's implicit damping."""
+        moves: List[Tuple[DemandSummary, DemandSummary, int]] = []
+        shard_ids = {r.shard for r in rows}
+        if not rows or len(shard_ids) < 2:
+            return moves
+        if max_moves is None:
+            max_moves = 4 * len(rows)
+        min_share = self.cfg.min_share
+        n_shards = len(shard_ids)
+        base_q = self.cfg.rebalance_quantum
+        prev_flow = self._flow
+        flow: set = set()
+        hot_spent: Dict[tuple, int] = {}
+
+        def rk(r: DemandSummary) -> tuple:
+            return (r.shard, tuple(r.key))
+
+        def apply(donor: DemandSummary, taker: DemandSummary,
+                  amt: int) -> None:
+            for row, delta in ((donor, -amt), (taker, amt)):
+                row.quota += delta
+                row.headroom += delta
+                if row.demand_limit is not None:
+                    row.wants_more = row.quota < row.demand_limit
+            donor.free = max(0, donor.free - amt)
+            taker.want = max(0, taker.want - amt)
+            flow.add((rk(donor), rk(taker)))
+            moves.append((donor, taker, amt))
+
+        def hot_room(donor: DemandSummary, taker: DemandSummary) -> int:
+            # Forced-eviction (hot-byte) allowance for this donor: grows
+            # with the donor/taker benefit gap and the shard count
+            # (big imbalances at high n must close fast), shrinks to one
+            # quantum near the hysteresis threshold.
+            ratio = taker.benefit / max(donor.benefit, 1e-18)
+            scale = max(1.0, min(
+                4.0 * n_shards,
+                n_shards * math.log2(max(1.0, ratio / self.HYSTERESIS))))
+            cap = int(base_q * scale)
+            return max(0, cap - hot_spent.get(rk(donor), 0))
+
+        # ------------------------- phase 1: floor top-up ----------------
+        for taker in sorted([r for r in rows if r.can_take],
+                            key=lambda r: -r.benefit):
+            guard = 0
+            while taker.quota < taker.floor and guard < 64:
+                guard += 1
+                donors = [d for d in rows
+                          if d.shard != taker.shard and d.headroom > 0
+                          and (not d.can_take or d.quota > min_share)
+                          and (rk(taker), rk(d)) not in flow]
+                if not donors:
+                    break
+                donor = min(donors, key=lambda d: (d.benefit, -d.free))
+                amt = min(taker.floor - taker.quota, donor.headroom)
+                if amt <= 0:
+                    break
+                apply(donor, taker, amt)
+
+        # ------------------------- phase 2: want-sized moves ------------
+        for _ in range(max_moves - len(moves)):
+            takers = [r for r in rows if r.can_take and r.want > 0]
+            if not takers:
+                break
+            progressed = False
+            for taker in sorted(takers, key=lambda r: -r.benefit):
+                cands = []
+                for d in rows:
+                    if d.shard == taker.shard or d.headroom <= 0:
+                        continue
+                    if not self.clears_hysteresis(d.benefit, taker.benefit):
+                        continue
+                    if ((rk(taker), rk(d)) in prev_flow
+                            or (rk(taker), rk(d)) in flow):
+                        continue      # would reverse a fresh flow
+                    avail = min(d.headroom, d.free + hot_room(d, taker))
+                    if avail > 0:
+                        cands.append((d, avail))
+                if not cands:
+                    continue
+                donor, avail = min(cands,
+                                   key=lambda e: (e[0].benefit, -e[1]))
+                amt = min(taker.want, avail)
+                if amt <= 0:
+                    continue
+                hot = max(0, amt - donor.free)
+                if hot:
+                    hot_spent[rk(donor)] = hot_spent.get(rk(donor), 0) + hot
+                apply(donor, taker, amt)
+                progressed = True
+                break
+            if not progressed:
+                break
+        self._flow = flow
+        return moves
+
+    def note_round(self, now: float, summaries: Sequence[ShardSummary],
+                   moves: Sequence[tuple]) -> dict:
+        """Record per-round stats and merge the shards' shipped sketches
+        into the cluster-wide heat view.  Both drivers call this once
+        per round; ``sim.cluster`` surfaces ``round_log`` as the
+        ``rebalance_trace``."""
+        heat: Optional[CountMinSketch] = None
+        hot: Optional[SpaceSaving] = None
+        for s in summaries:
+            if s.cms_payload:
+                c = CountMinSketch.deserialize(s.cms_payload)
+                heat = c if heat is None else heat.merge(c)
+            if s.topk_payload:
+                t = SpaceSaving.deserialize(s.topk_payload)
+                hot = t if hot is None else hot.merge(t)
+        self.cluster_heat, self.cluster_hot = heat, hot
+        stat = {
+            "t": now,
+            "policy": self.cfg.quantum_policy,
+            "moves": len(moves),
+            "bytes_moved": int(sum(m[2] for m in moves)),
+            "max_move": int(max((m[2] for m in moves), default=0)),
+            "summary_bytes": int(sum(s.payload_bytes() for s in summaries)),
+            "ghost_mass": int(sum(s.ghost_mass for s in summaries)),
+            "hot_blocks": len(hot.counts) if hot is not None else 0,
+        }
+        self.last_stats = stat
+        self.round_log.append(stat)
+        if len(self.round_log) > 4096:
+            del self.round_log[:len(self.round_log) - 4096]
+        return stat
+
+    def urgent(self, shards: Sequence[IGTCache]) -> bool:
+        """True when some workload CMU sits below its minimum share — a
+        stream created after the defaults drained would otherwise wait a
+        full period with zero quota (adaptive policy only)."""
+        if self.cfg.quantum_policy == "fixed":
+            return False
+        for eng in shards:
+            for _, c in eng.iter_workload_cmus():
+                if c.quota < self.cfg.min_share:
+                    return True
+        return False
+
+    def urgent_due(self, now: float, shards: Sequence[IGTCache]) -> bool:
+        """Rate-limited starvation trigger: an early round may fire at
+        most every period/4 (a starving CMU with no donors anywhere must
+        not force a round per tick)."""
+        if now - self.last_round < max(1.0, self.cfg.rebalance_period / 4):
+            return False
+        return self.urgent(shards)
+
     def rebalance_shards(self, shards: Sequence[IGTCache], now: float,
                          max_moves: Optional[int] = None) -> List[tuple]:
         """In-process round: summarize each shard (the same rows a worker
         would ship), plan with the shared greedy rule, apply to the live
         engines.  A cross-shard move shifts CMU quota and backing pool
         capacity together, so total capacity is conserved and every
-        shard keeps ``sum(quota) == capacity``."""
+        shard keeps ``sum(quota) == capacity``.
+
+        The facade plans over the full row set (it holds the live
+        objects anyway); the process driver plans over the wire
+        summaries' capped rows.  The cap only binds past ``cfg.topk``
+        workload CMUs per shard, where the tail carries negligible
+        weight by construction."""
         self.last_round = now
         rows: List[DemandSummary] = []
         live: List[CacheManageUnit] = []     # rows[i] describes live[i]
         owner: List[IGTCache] = []
+        summaries: List[ShardSummary] = []
         for sid, eng in enumerate(shards):
             for row, cmu in self.tracker.summarize(eng, sid, now,
                                                    mark=False):
                 rows.append(row)
                 live.append(cmu)
                 owner.append(eng)
+            got = self.tracker.summaries.get(sid)
+            if got is not None:
+                summaries.append(got)
         self.tracker.mark_all(live)
         index = {id(r): i for i, r in enumerate(rows)}
         moves: List[tuple] = []
         if len(shards) < 2:
+            self.note_round(now, summaries, moves)
             return moves
         for d_row, t_row, amt in self.plan_moves(rows, max_moves):
             donor, taker = live[index[id(d_row)]], live[index[id(t_row)]]
@@ -225,6 +478,7 @@ class GlobalRebalancer(Rebalancer):
             t_eng.cache.adjust_capacity(amt)
             taker.set_quota(taker.quota + amt)
             moves.append((donor, taker, amt))
+        self.note_round(now, summaries, moves)
         return moves
 
 
@@ -245,6 +499,12 @@ class ShardDemandTracker:
         self.cfg = cfg
         # cmu -> (total_hits, total_probes) at the end of our last round
         self._ghost_mark: Dict[CacheManageUnit, Tuple[int, int]] = {}
+        # cmu -> EMA-smoothed benefit (adaptive policy only): want-sized
+        # moves amplify one noisy interval into a large transfer, so the
+        # planner sees a half-life-one-round smoothed B instead
+        self._ema: Dict[CacheManageUnit, float] = {}
+        # sid -> last wire summary built by summarize()
+        self.summaries: Dict[int, ShardSummary] = {}
 
     def estimate(self, cmu: CacheManageUnit, now: float) -> DemandEstimate:
         est = marginal_benefit(cmu, now, self.cfg)
@@ -255,28 +515,76 @@ class ShardDemandTracker:
             f = dh / dp if dp else 0.0
             est = DemandEstimate(cmu.arrival_rate(now) * f / bw.w,
                                  dh > 0, est.can_shrink)
+        if self.cfg.quantum_policy != "fixed":
+            prev = self._ema.get(cmu)
+            b = est.benefit if prev is None else 0.5 * prev + 0.5 * est.benefit
+            self._ema[cmu] = b
+            est = DemandEstimate(b, est.wants_more, est.can_shrink)
         return est
 
     def _row(self, cmu: CacheManageUnit, sid: int, now: float,
-             can_take: bool) -> DemandSummary:
+             can_take: bool, sketch=None) -> DemandSummary:
         est = self.estimate(cmu, now)
         limit: Optional[float] = None
         pat = cmu.effective_pattern()
+        min_share = self.cfg.min_share
         if pat is Pattern.RANDOM:
             limit = float(cmu.dataset_bytes)
         elif pat is Pattern.UNKNOWN and can_take:
             # wants_more was `used >= 0.95 * quota` — express as a quota
             # threshold so mid-round moves re-evaluate it
             limit = cmu.used / 0.95 if cmu.used else 0.0
+        # ---- adaptive sizing: want / floor / free ----------------------
+        want = 0
+        floor = min_share
+        if can_take:
+            if pat is Pattern.RANDOM:
+                # insatiable below the dataset (paper §3.3)
+                want = max(0, cmu.dataset_bytes - cmu.quota)
+            elif pat is Pattern.SKEWED:
+                # unmet working set = distinct ghost-hit blocks this
+                # interval: tracked heavy hitters exactly (SpaceSaving
+                # lower bounds), the cold tail upper-bounded by the
+                # unattributed ghost-hit mass (>= 1 hit per block)
+                th, _tp = self._ghost_mark.get(cmu, (0, 0))
+                dh = cmu.buffer_window.total_hits - th
+                if dh > 0:
+                    distinct = dh
+                    if sketch is not None and sketch.cms.total > 0:
+                        head, head_mass = sketch.distinct_under(
+                            path_key(cmu.root_path) + "/")
+                        distinct = head + max(0, dh - head_mass)
+                    want = distinct * self.cfg.block_size
+            elif pat is Pattern.UNKNOWN:
+                if cmu.used >= 0.95 * cmu.quota:
+                    want = max(0, int(cmu.used / 0.95) - cmu.quota)
+            else:       # SEQUENTIAL: wants nothing beyond its prefetch
+                # window, but squeezing an *active* stream below that
+                # window thrashes the readahead (issue → evict before
+                # access), so the floor covers it
+                if cmu.arrival_rate(now) > 1e-3:
+                    floor = max(min_share, self.cfg.prefetch_budget_bytes)
+            if cmu.dataset_bytes:
+                want = min(want, max(0, cmu.dataset_bytes - cmu.quota))
+                floor = min(floor, cmu.dataset_bytes)
+        if can_take or self.cfg.quantum_policy == "fixed":
+            headroom = cmu.quota - min_share
+        else:
+            # zero-floor defaults (adaptive): a shard default exists to
+            # lend capacity, reserving min_share on every one of N
+            # shards locks away N×min_share the workload CMUs need
+            headroom = cmu.quota
         return DemandSummary(
             shard=sid, key=cmu.root_path, benefit=est.benefit,
             wants_more=est.wants_more, can_take=can_take, quota=cmu.quota,
-            headroom=cmu.quota - self.cfg.min_share, demand_limit=limit)
+            headroom=headroom, demand_limit=limit, want=int(want),
+            floor=int(floor), free=max(0, cmu.quota - cmu.used))
 
     def summarize(self, eng: IGTCache, sid: int, now: float,
                   mark: bool = True
                   ) -> List[Tuple[DemandSummary, CacheManageUnit]]:
-        """Demand rows for one shard.
+        """Demand rows for one shard, plus the wire :class:`ShardSummary`
+        (stashed in ``self.summaries[sid]``).
 
         The shard's *default* CMU is included as a donor-only row
         (``can_take=False``): a shard whose datasets happen to be
@@ -284,26 +592,67 @@ class ShardDemandTracker:
         1/N of the cluster capacity hostage.  Mirrors the shard-local
         round, which also passes the default CMU as a donor.
 
+        One demand-sketch measurement interval spans one call: the
+        sketch is folded, read for the rows, serialized into the wire
+        summary, then reset.
+
         ``mark=True`` (the single-shard / worker-resident case) advances
         the ghost marks to now; a tracker measuring several shards must
         pass ``mark=False`` per shard and call :meth:`mark_all` once
-        with every shard's CMUs — replacing the dict per shard would
-        wipe the other shards' marks."""
+        with every shard's CMUs — marking per shard would reset the
+        other shards' intervals early."""
+        sketch = getattr(eng.cache, "demand_sketch", None)
+        if sketch is not None:
+            sketch.fold()
         pairs: List[Tuple[DemandSummary, CacheManageUnit]] = []
         for c in eng.workload_cmus():
-            pairs.append((self._row(c, sid, now, can_take=True), c))
+            pairs.append((self._row(c, sid, now, True, sketch), c))
         d = eng.cache.default_cmu
-        pairs.append((self._row(d, sid, now, can_take=False), d))
+        pairs.append((self._row(d, sid, now, False, sketch), d))
+        self.summaries[sid] = self._wire(sid, [r for r, _ in pairs], sketch)
+        if sketch is not None:
+            sketch.reset()
         if mark:
             self.mark_all(c for _, c in pairs)
         return pairs
 
+    def _wire(self, sid: int, rows: List[DemandSummary],
+              sketch) -> ShardSummary:
+        """Bounded wire summary: default row + top-k workload rows by
+        demand weight, tail aggregated, sketches serialized."""
+        work = [r for r in rows if r.can_take]
+        work.sort(key=lambda r: -(r.want + max(0, r.headroom)))
+        keep, tail = work[:self.cfg.topk], work[self.cfg.topk:]
+        return ShardSummary(
+            shard=sid,
+            rows=[r for r in rows if not r.can_take] + keep,
+            n_cmus=len(work),
+            tail_cmus=len(tail),
+            tail_quota=sum(r.quota for r in tail),
+            tail_want=sum(r.want for r in tail),
+            ghost_mass=sketch.noted if sketch is not None else 0,
+            cms_payload=(sketch.cms.serialize()
+                         if sketch is not None and sketch.cms.total else b""),
+            topk_payload=(sketch.topk.serialize()
+                          if sketch is not None and sketch.topk.counts
+                          else b""))
+
     def mark_all(self, cmus) -> None:
         """Start the next measurement interval at the current cumulative
-        ghost counters (marks of TTL-removed CMUs are dropped)."""
-        self._ghost_mark = {
-            c: (c.buffer_window.total_hits, c.buffer_window.total_probes)
-            for c in cmus}
+        ghost counters.  Marks (and benefit EMAs) of CMUs no longer
+        summarized — TTL-removed or evicted since last round — are
+        pruned in the same pass, so the tables stay bounded by the live
+        CMU population without rebuilding the dict every round."""
+        marks = self._ghost_mark
+        seen = set()
+        for c in cmus:
+            marks[c] = (c.buffer_window.total_hits,
+                        c.buffer_window.total_probes)
+            seen.add(id(c))
+        stale = [c for c in marks if id(c) not in seen]
+        for c in stale:
+            del marks[c]
+            self._ema.pop(c, None)
 
 
 def split_capacity(capacity: int, n_shards: int) -> List[int]:
@@ -393,9 +742,10 @@ class ShardedIGTCache(ShardRouting):
         read-triggered local rounds: SKEWED demand is measured from
         cumulative ghost counters over the global round's own interval
         (see GlobalRebalancer), so ordering here is not load-bearing."""
-        if (self.n_shards > 1 and self.options.allocation == "adaptive"
-                and self.global_rebalancer.due(now)):
-            self.global_rebalancer.rebalance_shards(self.shards, now)
+        if self.n_shards > 1 and self.options.allocation == "adaptive":
+            gr = self.global_rebalancer
+            if gr.due(now) or gr.urgent_due(now, self.shards):
+                gr.rebalance_shards(self.shards, now)
         for s in self.shards:
             s.tick(now)
 

@@ -110,6 +110,17 @@ class CacheConfig:
     block_size: int = 4 * MB
     # Re-run pattern analysis every this many accesses after non-trivial.
     reanalyze_every: int = 50
+    # Cross-shard demand sketches (core/sketch.py): CountMinSketch geometry
+    # for the per-shard ghost-hit heat summary, and the SpaceSaving top-k
+    # capacity (also caps exact per-CMU rows in a shard's wire summary).
+    sketch_width: int = 512
+    sketch_depth: int = 3
+    topk: int = 64
+    # Cross-shard move sizing: "adaptive" sizes each move by the taker's
+    # measured unmet demand (sketch-derived) with gap/shard-count-scaled
+    # caps on forced-eviction transfers; "fixed" is the legacy
+    # one-quantum-per-move greedy loop.
+    quantum_policy: str = "adaptive"
 
 
 @dataclass

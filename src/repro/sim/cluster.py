@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 # complete_prefetch / tick / ...), so the sharded facade slots in
 # unchanged.
 from ..core import path_key
+from ..core.allocation import marginal_benefit
 from ..core.client import CacheClient, PrefetchExecutor
 from ..core.sharded import Engine
 from ..core.types import PathT
@@ -80,6 +81,9 @@ class SimResult:
     step_trace: Dict[int, List[float]]         # job_id -> step finish times
     alloc_trace: List[dict] = field(default_factory=list)
     chaos_log: List[dict] = field(default_factory=list)
+    # per-round cross-shard rebalance stats (moves applied, bytes moved,
+    # summary payload bytes, ghost mass) — empty for unsharded engines
+    rebalance_trace: List[dict] = field(default_factory=list)
 
     @property
     def avg_jct(self) -> float:
@@ -189,11 +193,14 @@ class ClusterSim:
         if self._chaos is not None:       # never leave a worker wedged
             self._chaos.resume_all()
         util = self.link.busy_time / max(1e-9, self.now)
+        reb = getattr(self.engine, "global_rebalancer", None)
         return SimResult(jct=jct, hit_ratio=self.engine.hit_ratio(),
                          stats=self.engine.snapshot(), makespan=self.now,
                          link_utilization=util, step_trace=self._step_trace,
                          alloc_trace=self._alloc_trace,
-                         chaos_log=self._chaos_log)
+                         chaos_log=self._chaos_log,
+                         rebalance_trace=(list(reb.round_log)
+                                          if reb is not None else []))
 
     def _strike(self, kind: str, sid: int) -> None:
         if self._chaos is None:
@@ -271,7 +278,6 @@ class ClusterSim:
 
     # ----------------------------------------------------------------- traces
     def _sample_alloc(self) -> None:
-        from ..core.allocation import marginal_benefit
         row = {"t": self.now}
         for path, cmu in self.engine.iter_workload_cmus():
             est = marginal_benefit(cmu, self.now, self.engine.cfg)

@@ -20,9 +20,9 @@ def test_overhead_smoke_emits_json(tmp_path):
     assert at10k["nodes"] > 0
     assert "seed_reference" in payload
     assert "speedup_vs_pr1_start_seed" in payload
-    # sharded-facade axis: both shard counts measured (interleaved) into the
-    # perf trajectory
-    for n in ("1", "4"):
+    # sharded-facade axis: every default shard count measured
+    # (interleaved) into the perf trajectory
+    for n in ("1", "4", "8", "16"):
         point = payload["sharded"][n]
         assert point["us_per_access"] > 0
         assert point["nodes"] > 0
@@ -36,6 +36,47 @@ def test_overhead_smoke_emits_json(tmp_path):
         assert axis[key]["us_per_access"] > 0
     assert "speedup_4p_vs_1p" in axis
     assert "speedup_4p_vs_kernel" in axis
+    # rebalance_path axis (merged section; smoke runs the first shard
+    # count >1 only): sketch-based demand summaries drive the planner —
+    # CHR gap vs unsharded recorded for both quantum policies, and the
+    # per-round summary payload stays KB-scale
+    reb = payload["rebalance_path"]
+    assert reb["smoke"] is True
+    assert reb["unsharded_chr"] > 0
+    for key in ("adaptive_4", "fixed_4"):
+        point = reb[key]
+        assert point["chr"] > 0
+        assert point["rounds"] > 0
+        assert point["summary_bytes_round_max"] > 0
+        assert point["summary_bytes_round_max"] <= 4 * 4096
+    # the adaptive policy is the one that converges: never (meaningfully)
+    # worse than the fixed-quantum legacy path on the same trace
+    assert reb["adaptive_4"]["chr"] >= reb["fixed_4"]["chr"] - 0.01
+
+
+def test_sketch_micro_smoke(tmp_path):
+    """--smoke sketch_path axis: the PR-7 demand-tracking pipeline
+    (update + per-stream query + ship/merge) — sketch vs exact
+    ghost-counter path, merged into the shared overhead JSON.  The
+    strict per-access crossover is a 1M-distinct full-scale claim; smoke
+    checks the pipeline runs, stays in the same cost ballpark, and the
+    wire payload is O(KB) while the exact dump is O(MB)."""
+    from benchmarks import allocation_micro
+
+    out = tmp_path / "BENCH_overhead.json"
+    out.write_text(json.dumps({"results": {"10000": {"us_per_access": 1}}}))
+    rows = allocation_micro.run_sketch_micro(smoke=True, json_path=out)
+    assert rows, "sketch_path smoke produced no CSV rows"
+    payload = json.loads(out.read_text())
+    assert payload["results"]["10000"]["us_per_access"] == 1  # preserved
+    axis = payload["sketch_path"]
+    assert axis["smoke"] is True
+    for name in ("exact", "sketch"):
+        assert axis[name]["us_per_access"] > 0
+        assert axis[name]["wire_bytes"] > 0
+    assert axis["sketch"]["wire_bytes"] <= 24 * 1024
+    assert axis["exact"]["wire_bytes"] > 100 * 1024
+    assert axis["wire_reduction"] > 10
 
 
 def test_store_micro_smoke(tmp_path):

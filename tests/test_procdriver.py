@@ -25,7 +25,7 @@ from repro.core import (CacheConfig, GlobalRebalancer, IGTCache,
                         ProcessExecutor, ProcessShardedCache,
                         ShardedIGTCache, open_cache)
 from repro.core.procdriver import WireOutcome
-from repro.core.sharded import DemandSummary
+from repro.core.sharded import DemandSummary, ShardSummary
 from repro.core.types import MB
 from repro.storage import RemoteStore, make_dataset
 from repro.storage.api import FaultyStore, store_spec
@@ -371,20 +371,29 @@ def test_arena_slots_recycle_under_pressure():
 # cross-shard allocation over serialized summaries
 # ---------------------------------------------------------------------------
 
-def test_plan_moves_matches_live_rebalancer():
-    """The serialized planner is the same greedy rule the live
-    cross-shard round applies (one skewed taker, one idle donor)."""
-    from repro.core import Pattern
-    store = mk_store()
-    s0 = IGTCache(store, 32 * MB, cfg=CFG)
-    s1 = IGTCache(store, 32 * MB, cfg=CFG)
+def _skewed_pair(store, cfg):
+    s0 = IGTCache(store, 32 * MB, cfg=cfg)
+    s1 = IGTCache(store, 32 * MB, cfg=cfg)
     cmu = s0.cache.create_cmu(("ds0",), 128 * MB, now=0.0)
+    from repro.core import Pattern
     cmu.flat_pattern = Pattern.SKEWED
     for i in range(50):
         cmu.note_access(i * 0.01)
         cmu.buffer_window.on_evict(f"k{i}")
         cmu.buffer_window.probe(f"k{i}")
-    reb = GlobalRebalancer(CFG)
+    return s0, s1
+
+
+def test_plan_moves_matches_live_rebalancer():
+    """The serialized planner is the same greedy rule the live
+    cross-shard round applies (one skewed taker, one idle donor) —
+    checked under both move-sizing policies: fixed ships exactly one
+    quantum, adaptive sizes the move by the measured want."""
+    import dataclasses
+    store = mk_store()
+    fixed_cfg = dataclasses.replace(CFG, quantum_policy="fixed")
+    s0, s1 = _skewed_pair(store, fixed_cfg)
+    reb = GlobalRebalancer(fixed_cfg)
     rows = [r for r, _ in reb.tracker.summarize(s0, 0, 1.0, mark=False)]
     rows += [r for r, _ in reb.tracker.summarize(s1, 1, 1.0, mark=False)]
     moves = reb.plan_moves(rows)
@@ -393,6 +402,20 @@ def test_plan_moves_matches_live_rebalancer():
     assert taker.key == ("ds0",) and taker.shard == 0
     assert donor.shard == 1
     assert amt == CFG.rebalance_quantum
+
+    s0, s1 = _skewed_pair(store, CFG)        # adaptive (default policy)
+    reb = GlobalRebalancer(CFG)
+    rows = [r for r, _ in reb.tracker.summarize(s0, 0, 1.0, mark=False)]
+    rows += [r for r, _ in reb.tracker.summarize(s1, 1, 1.0, mark=False)]
+    moves = reb.plan_moves(rows)
+    assert moves
+    donor, taker, amt = moves[0]
+    assert taker.key == ("ds0",) and taker.shard == 0
+    assert donor.shard == 1
+    # want-sized: 50 distinct ghost-hit blocks x block_size, capped by
+    # the donor's headroom — strictly more than one fixed quantum
+    assert amt > CFG.rebalance_quantum
+    assert amt <= 50 * CFG.block_size
 
 
 def test_process_driver_rebalance_conserves_capacity():
@@ -418,9 +441,16 @@ def test_process_driver_rebalance_conserves_capacity():
         # per-shard quota invariant after the rounds
         for g in eng._gather_stats():
             assert g["capacity"] >= 0
-        # DemandSummary rows really crossed the pipe
-        rows = eng._rpc(0, "rebalance_summary", t + 999.0)
-        assert all(isinstance(r, DemandSummary) for r in rows)
+        # the bounded wire summary really crossed the pipe: exact rows
+        # plus the serialized demand sketches, O(KB) total
+        summary = eng._rpc(0, "rebalance_summary", t + 999.0)
+        assert isinstance(summary, ShardSummary)
+        assert summary.rows
+        assert all(isinstance(r, DemandSummary) for r in summary.rows)
+        assert summary.payload_bytes() <= 64 * 1024
+        # driver-side round stats got recorded (sketch merge path)
+        assert eng.global_rebalancer.last_stats is not None
+        assert eng.global_rebalancer.round_log
 
 
 # ---------------------------------------------------------------------------

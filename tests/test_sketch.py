@@ -1,0 +1,213 @@
+"""Property tests for the demand sketches (PR-7 tentpole).
+
+CountMinSketch: point queries never under-count; over-count bounded by
+2/width of the per-row mass at the seeded geometry; merge() is
+element-wise addition and associative; serialize/deserialize round-trips
+bitwise.  SpaceSaving: any key with true count > total/k is present
+(guaranteed containment); counts over-estimate by at most the recorded
+err; merge keeps both properties.  DemandSketch: ghost-hit feeding via
+BufferWindow.sink, distinct_under prefix accounting, O(KB) payloads.
+"""
+import random
+
+import pytest
+
+from repro.core.allocation import BufferWindow
+from repro.core.sketch import (CountMinSketch, DemandSketch, SpaceSaving,
+                               stable_hash64)
+from repro.core.types import CacheConfig
+
+
+def zipf_stream(rng, n_keys=2000, n_draws=20000, s=1.2):
+    weights = [1.0 / (i + 1) ** s for i in range(n_keys)]
+    keys = [f"ds/blk#{i}" for i in range(n_keys)]
+    return rng.choices(keys, weights=weights, k=n_draws)
+
+
+def exact_counts(stream):
+    from collections import Counter
+    return Counter(stream)
+
+
+# ------------------------------------------------------------------- hashing
+
+def test_stable_hash64_is_process_stable_and_spread():
+    # pinned values: the hash must never change across runs/processes
+    # (routing and sketch compatibility depend on it)
+    assert stable_hash64("a") == stable_hash64("a")
+    assert stable_hash64("a") != stable_hash64("b")
+    vals = {stable_hash64(f"k{i}") & 0xFFFF for i in range(4096)}
+    assert len(vals) > 3000          # low-bit spread after mixing
+
+
+# ----------------------------------------------------------------------- CMS
+
+def test_cms_never_undercounts_and_bounds_overestimate():
+    rng = random.Random(7)
+    stream = zipf_stream(rng)
+    truth = exact_counts(stream)
+    cms = CountMinSketch(width=512, depth=3, seed=0)
+    cms.update_batch(stream)
+    assert cms.total == len(stream)
+    # epsilon = 2/width of the stream mass (classic CM bound, per query
+    # with failure prob 2^-depth; conservative update only tightens it).
+    # Check the bound holds for the overwhelming majority and never
+    # under-counts for any key.
+    eps_mass = 2.0 * len(stream) / 512
+    violations = 0
+    for k, c in truth.items():
+        est = cms.query(k)
+        assert est >= c, f"under-count: {k} est={est} true={c}"
+        if est > c + eps_mass:
+            violations += 1
+    assert violations <= max(1, len(truth) // 100), \
+        f"{violations}/{len(truth)} queries exceeded the CM bound"
+
+
+def test_cms_update_orders_agree_with_single_updates():
+    """Batched conservative update must never under-count relative to
+    truth regardless of batching; single-key and batched paths agree on
+    totals."""
+    rng = random.Random(11)
+    stream = zipf_stream(rng, n_keys=200, n_draws=3000)
+    a = CountMinSketch(width=256, depth=3, seed=5)
+    b = CountMinSketch(width=256, depth=3, seed=5)
+    for k in stream:
+        a.update(k)
+    b.update_batch(stream)
+    truth = exact_counts(stream)
+    for k, c in truth.items():
+        assert a.query(k) >= c
+        assert b.query(k) >= c
+    assert a.total == b.total == len(stream)
+
+
+def test_cms_merge_associative_and_overestimates_union():
+    rng = random.Random(13)
+    parts = [zipf_stream(rng, n_keys=500, n_draws=4000) for _ in range(3)]
+
+    def mk(stream):
+        c = CountMinSketch(width=512, depth=3, seed=1)
+        c.update_batch(stream)
+        return c
+
+    # (a+b)+c == a+(b+c): tables identical element-wise
+    left = mk(parts[0]).merge(mk(parts[1])).merge(mk(parts[2]))
+    bc = mk(parts[1]).merge(mk(parts[2]))
+    right = mk(parts[0]).merge(bc)
+    assert (left.table == right.table).all()
+    assert left.total == right.total == sum(len(p) for p in parts)
+    truth = exact_counts([k for p in parts for k in p])
+    for k, c in truth.items():
+        assert left.query(k) >= c
+
+
+def test_cms_merge_rejects_incompatible():
+    a = CountMinSketch(width=512, depth=3, seed=0)
+    with pytest.raises(ValueError):
+        a.merge(CountMinSketch(width=256, depth=3, seed=0))
+    with pytest.raises(ValueError):
+        a.merge(CountMinSketch(width=512, depth=3, seed=1))
+
+
+def test_cms_serde_round_trip_and_bounded_payload():
+    rng = random.Random(17)
+    cms = CountMinSketch(width=512, depth=3, seed=0)
+    cms.update_batch(zipf_stream(rng))
+    blob = cms.serialize()
+    back = CountMinSketch.deserialize(blob)
+    assert back.compatible(cms)
+    assert back.total == cms.total
+    assert (back.table == cms.table).all()
+    # O(KB): a 512x3 uint64 table is 12 KiB raw; zlib keeps the wire
+    # payload at or below that even when fully populated
+    assert len(blob) <= 16 * 1024
+    with pytest.raises(ValueError):
+        CountMinSketch.deserialize(b"XXXX" + blob[4:])
+
+
+# ---------------------------------------------------------------- SpaceSaving
+
+def test_spacesaving_guaranteed_containment_and_error_bounds():
+    rng = random.Random(23)
+    stream = zipf_stream(rng, n_keys=3000, n_draws=30000, s=1.1)
+    truth = exact_counts(stream)
+    k = 64
+    ss = SpaceSaving(k=k)
+    ss.update_batch(stream)
+    assert ss.total == len(stream)
+    assert len(ss.counts) <= k
+    threshold = len(stream) / k
+    for key, c in truth.items():
+        if c > threshold:
+            assert key in ss.counts, \
+                f"heavy hitter missing: {key} true={c} > {threshold:.0f}"
+    for key, est, err in ss.items():
+        true = truth.get(key, 0)
+        assert est >= true, "SpaceSaving count must over-estimate"
+        assert est - err <= true, "err must bound the over-estimate"
+
+
+def test_spacesaving_merge_keeps_bounds():
+    rng = random.Random(29)
+    s1 = zipf_stream(rng, n_keys=1500, n_draws=15000, s=1.1)
+    s2 = zipf_stream(rng, n_keys=1500, n_draws=15000, s=1.1)
+    a, b = SpaceSaving(k=64), SpaceSaving(k=64)
+    a.update_batch(s1)
+    b.update_batch(s2)
+    a.merge(b)
+    truth = exact_counts(s1 + s2)
+    assert a.total == len(s1) + len(s2)
+    assert len(a.counts) <= 64
+    for key, c in truth.items():
+        if c > a.total / 64 * 2:     # mergeable-summaries: 2x slack
+            assert key in a.counts
+    for key, est, err in a.items():
+        assert est >= truth.get(key, 0)
+    with pytest.raises(ValueError):
+        a.merge(SpaceSaving(k=32))
+
+
+def test_spacesaving_serde_round_trip():
+    rng = random.Random(31)
+    ss = SpaceSaving(k=64)
+    ss.update_batch(zipf_stream(rng, n_draws=5000))
+    blob = ss.serialize()
+    back = SpaceSaving.deserialize(blob)
+    assert back.k == ss.k and back.total == ss.total
+    assert back.counts == ss.counts and back.errs == ss.errs
+    assert len(blob) <= 8 * 1024     # 64 entries -> well under a KB-scale cap
+
+
+# --------------------------------------------------------------- DemandSketch
+
+def test_demand_sketch_feeds_from_buffer_window_sink():
+    cfg = CacheConfig()
+    sk = DemandSketch(cfg)
+    bw = BufferWindow(w=100)
+    bw.sink = sk.note
+    for i in range(50):
+        bw.on_evict(f"hot/part0#{i % 5}")
+        assert bw.probe(f"hot/part0#{i % 5}")     # ghost hit -> noted
+        bw.on_evict(f"cold/x#{i}")                # never probed -> not noted
+    sk.fold()
+    assert sk.noted == 50
+    head, head_mass = sk.distinct_under("hot/")
+    assert head == 5
+    assert head_mass <= 50
+    assert sk.distinct_under("cold/") == (0, 0)
+    assert sk.distinct_under("other/") == (0, 0)
+
+
+def test_demand_sketch_interval_reset_and_payloads():
+    sk = DemandSketch(CacheConfig())
+    for i in range(10000):
+        sk.note(f"ds/blk#{i % 700}")
+    cms_blob, topk_blob = sk.serialize()
+    assert 0 < len(cms_blob) <= 16 * 1024
+    assert 0 < len(topk_blob) <= 8 * 1024
+    assert sk.noted == 10000
+    sk.reset()
+    assert sk.noted == 0
+    assert sk.distinct_under("ds/") == (0, 0)
+    assert sk.cms.total == 0 and sk.topk.total == 0

@@ -1,0 +1,152 @@
+"""Cache-daemon micro-benchmark (the ``daemon_path`` axis).
+
+The daemon's scale-out claim: the serve path adds one framed round-trip
+per batch but removes the per-process kernel, so N client *processes*
+sharing one daemon should deliver aggregate metadata throughput that
+scales with N — past the single-client multi-process driver number
+(``proc_4`` in ``BENCH_overhead.json``), which pays RPC fan-out per
+batch without any cross-process sharing to show for it.
+
+Protocol: one ``CacheDaemon`` on a temp UDS over a seeded RemoteStore
+world; for N in {1, 2, 4}, fork N client processes that each
+``open_cache("cache://...")`` and drive seeded metadata ``read_batch``
+loops (no byte fetches — this is the command-path number, matching the
+other axes) through a start barrier; aggregate accesses/s is the total
+access count over the slowest client's wall time.  Results merge into
+``BENCH_overhead.json`` under ``daemon_path`` (``--smoke`` → the smoke
+file; exercised by tests/test_bench_smoke.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import time
+
+import numpy as np
+
+# .common bootstraps sys.path with REPO_ROOT/src — must import before repro
+from .common import REPO_ROOT, csv_row, merge_overhead_section
+
+from repro.core import CacheConfig, open_cache
+from repro.core.types import MB
+from repro.daemon import CacheDaemon
+from repro.storage import RemoteStore, make_dataset
+
+CLIENT_COUNTS = (1, 2, 4)
+
+
+def _world(n_datasets: int, files_per_dir: int):
+    store = RemoteStore()
+    for i in range(n_datasets):
+        store.add(make_dataset(f"job{i}", "dir_tree", n_dirs=4,
+                               files_per_dir=files_per_dir,
+                               small_file_size=256 * 1024))
+    return store
+
+
+def _client_proc(uri, files, n_steps, batch, seed, barrier, q):
+    """One forked client: seeded metadata read_batch loop, wall time
+    measured from the shared start barrier."""
+    rng = np.random.default_rng(seed)
+    steps = []
+    for _ in range(n_steps):
+        picks = rng.integers(0, len(files), batch)
+        steps.append([(files[int(j)][0], 0, files[int(j)][1])
+                      for j in picks])
+    with open_cache(f"{uri}?label=bench{seed}") as client:
+        # connection + a warm-up batch outside the timed region
+        client.read_batch(steps[0])
+        barrier.wait()
+        t0 = time.perf_counter()
+        for reqs in steps:
+            client.read_batch(reqs)
+        dt = time.perf_counter() - t0
+    q.put((n_steps * batch, dt))
+
+
+def _measure(uri, files, n_clients, n_steps, batch, seed):
+    ctx = mp.get_context("fork")
+    barrier = ctx.Barrier(n_clients)
+    q = ctx.SimpleQueue()
+    procs = [ctx.Process(target=_client_proc,
+                         args=(uri, files, n_steps, batch, seed + 31 * c,
+                               barrier, q))
+             for c in range(n_clients)]
+    for p in procs:
+        p.start()
+    # results are tiny tuples, so the queue pipe can't fill: join first
+    # and fail loudly on a dead child instead of hanging in get()
+    for p in procs:
+        p.join(120)
+        if p.exitcode != 0:
+            raise RuntimeError(f"bench client exited {p.exitcode}")
+    results = [q.get() for _ in procs]
+    total = sum(n for n, _ in results)
+    wall = max(dt for _, dt in results)     # aggregate over the slowest
+    return {"accesses": total,
+            "accesses_per_s": round(total / wall, 1),
+            "us_per_access": round(wall / total * 1e6, 1)}
+
+
+def _proc4_reference():
+    """The single-client 4-worker number this axis must scale past."""
+    try:
+        payload = json.loads((REPO_ROOT / "BENCH_overhead.json").read_text())
+        return payload["proc_path"]["proc_4"]["us_per_access"]
+    except (OSError, KeyError, ValueError):
+        return None
+
+
+def main(smoke: bool = False, seed: int = 0, json_path=None):
+    n_steps = 8 if smoke else 64
+    batch = 8 if smoke else 64
+    files_per_dir = 4 if smoke else 8
+    store = _world(4, files_per_dir)
+    cfg = CacheConfig(min_share=4 * MB, rebalance_quantum=4 * MB,
+                      window=40, reanalyze_every=20, node_cap=2000)
+    section = {"smoke": smoke, "batch": batch, "seed": seed,
+               "n_accesses_per_client": n_steps * batch}
+    with CacheDaemon(store, 96 * MB, cfg=cfg) as daemon:
+        files = [(f.path, f.size)
+                 for ds in store.datasets.values() for f in ds.files]
+        for n in CLIENT_COUNTS:
+            section[f"daemon_{n}"] = _measure(daemon.uri, files, n,
+                                              n_steps, batch, seed)
+        st = daemon.daemon_stats()
+        section["daemon_stats"] = {
+            "served_reads": st["served_reads"], "byes": st["byes"],
+            "spills": st["spills"], "reaped": st["reaped"]}
+
+    r1 = section["daemon_1"]["accesses_per_s"]
+    r4 = section["daemon_4"]["accesses_per_s"]
+    section["scaling_4_vs_1"] = round(r4 / r1, 2)
+    proc4_us = _proc4_reference()
+    section["proc_4_reference_us"] = proc4_us
+    if proc4_us:
+        # aggregate daemon throughput vs the single-client proc_4 rate
+        section["daemon_4_vs_proc_4"] = round(
+            r4 / (1e6 / proc4_us), 2)
+
+    rows = [
+        csv_row("daemon_path.daemon_1_accesses_per_s", r1,
+                f"us_per_access={section['daemon_1']['us_per_access']}"),
+        csv_row("daemon_path.daemon_4_accesses_per_s", r4,
+                f"us_per_access={section['daemon_4']['us_per_access']}"),
+        csv_row("daemon_path.scaling_4_vs_1", section["scaling_4_vs_1"],
+                f"daemon_2={section['daemon_2']['accesses_per_s']}"),
+        csv_row("daemon_path.daemon_4_vs_proc_4",
+                section.get("daemon_4_vs_proc_4"),
+                f"proc_4_us={proc4_us}"),
+    ]
+    merge_overhead_section("daemon_path", section, json_path)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="down-scaled run for the test job")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seed=args.seed)

@@ -15,6 +15,11 @@ pointed at a *real directory* (the URI store registry resolves
 ranged reads — the storage API that turns the reproduction from
 simulator-only into a system you can run on your own data.
 
+Part 3 is the cache *daemon*: the same directory served as a network
+service (``repro.daemon.CacheDaemon`` on a unix socket), with two
+independent ``open_cache("cache://...")`` clients sharing one cache —
+the second client's reads hit blocks the first one warmed.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -139,6 +144,61 @@ def file_store_walkthrough():
     print(f"executor accounting: {snap['executor']}")
 
 
+def daemon_walkthrough():
+    """Cache-as-a-service: one daemon, many client processes.
+
+    The daemon wraps the same ``open_cache`` stack behind a unix
+    socket; thin clients connect with ``open_cache("cache://<sock>")``
+    and share one kernel — one allocation, one hit-ratio, one prefetch
+    timeline — instead of each process running its own cache.
+    """
+    print("\n--- cache:// daemon walkthrough ----------------------------")
+    from repro.daemon import CacheDaemon
+
+    root = tempfile.mkdtemp(prefix="igt-daemon-")
+    rng = np.random.default_rng(1)
+    for d in range(2):
+        os.makedirs(os.path.join(root, "shared", f"{d:02d}"))
+        for i in range(4):
+            data = rng.integers(0, 256, 128 * 1024, dtype=np.uint8)
+            with open(os.path.join(root, "shared", f"{d:02d}",
+                                   f"{i:03d}.bin"), "wb") as f:
+                f.write(data.tobytes())
+    files = [("shared", f"{d:02d}", f"{i:03d}.bin")
+             for d in range(2) for i in range(4)]
+
+    cfg = CacheConfig(min_share=1 * MB, rebalance_quantum=1 * MB,
+                      block_size=64 * 1024)
+    # no uds= → the daemon picks a temp socket; d.uri is the address
+    with CacheDaemon(f"file://{root}", 16 * MB, cfg=cfg) as d:
+        print(f"daemon up at {d.uri}")
+
+        # client A (think: trainer #1) — cold reads, verified on-disk
+        with open_cache(d.uri, fetch_bytes=True) as a:
+            for rel in files:
+                res = a.read(rel, 0, a.meta.file_size(rel))
+                on_disk = open(os.path.join(root, *rel), "rb").read()
+                assert bytes(res.data) == on_disk, "daemon bytes != disk"
+        print(f"client A verified {len(files)} files against disk "
+              "(cold: demand misses warm the shared cache)")
+
+        # client B (trainer #2, a *separate* session) rides A's warmth
+        with open_cache(d.uri, fetch_bytes=True) as b:
+            hits = total = 0
+            for rel in files:
+                res = b.read(rel, 0, b.meta.file_size(rel))
+                total += len(res.blocks)
+                hits += sum(1 for blk in res.blocks if blk.hit)
+        print(f"client B hit {hits}/{total} blocks without fetching a "
+              "byte from the store")
+
+        st = d.daemon_stats()
+        print(f"daemon accounting: sessions_served={st['byes']} "
+              f"served_reads={st['served_reads']} spills={st['spills']} "
+              f"arena_free={st['arena_free']}/{st['arena_total']}")
+
+
 if __name__ == "__main__":
     main()
     file_store_walkthrough()
+    daemon_walkthrough()

@@ -1066,7 +1066,7 @@ class CacheClient:
 _EXECUTORS = ("sim", "threaded", "none", "process")
 
 
-def open_cache(store, capacity: int, *,
+def open_cache(store, capacity: Optional[int] = None, *,
                cfg: Optional[CacheConfig] = None,
                options: Optional[EngineOptions] = None,
                n_shards: int = 1,
@@ -1097,6 +1097,13 @@ def open_cache(store, capacity: int, *,
     ``StoreMeta`` and (unless ``backing`` overrides it) the client's
     backing store; legacy one-method ``fetch_block`` stores are adapted
     automatically.
+
+    A ``cache://`` URI (or ``DaemonAddress``) is special: it names a
+    running :class:`~repro.daemon.CacheDaemon`, so ``open_cache``
+    returns a connected ``RemoteCacheClient`` session instead of
+    building an engine — ``capacity`` must be omitted (the daemon owns
+    engine configuration) and only ``fetch_bytes`` plus the URI's query
+    params apply.
 
     ``driver`` selects where the shard kernels run:
 
@@ -1133,6 +1140,26 @@ def open_cache(store, capacity: int, *,
     if isinstance(store, str):
         from ..storage.api import open_store
         store = open_store(store)
+    if getattr(store, "is_cache_address", False):
+        # cache://<sock-or-host:port> — a running CacheDaemon endpoint:
+        # the daemon already owns the engine (capacity, shards, driver,
+        # executor), so the answer is a thin connected session, not a
+        # locally constructed stack.  URI query params (?fetch_bytes=
+        # true&label=trainer0) merge under explicit kwargs.
+        from ..daemon.client import RemoteCacheClient
+        if capacity is not None:
+            raise ValueError(
+                "capacity is owned by the daemon for cache:// stores — "
+                "configure it where the CacheDaemon is constructed")
+        params = dict(store.params)
+        params.setdefault("fetch_bytes", fetch_bytes)
+        allowed = ("fetch_bytes", "label", "heartbeat", "shm",
+                   "connect_timeout")
+        return RemoteCacheClient(
+            store, **{k: v for k, v in params.items() if k in allowed})
+    if capacity is None:
+        raise TypeError("open_cache() missing required argument: "
+                        "'capacity' (only cache:// stores omit it)")
     if driver not in ("thread", "process"):
         raise ValueError(f"unknown driver {driver!r}; expected 'thread' "
                          f"or 'process'")

@@ -78,6 +78,10 @@ from .meta import StoreMeta
 from .sharded import (DemandSummary, GlobalRebalancer, ShardDemandTracker,
                       ShardRouting, ShardSummary, split_capacity)
 from .types import CacheConfig, CacheStats, MB, PathT, Pattern
+# the compact reply codec is shared with the network cache daemon
+# (repro.daemon speaks the same frames) — core/wire.py is the one
+# definition; the old procdriver names stay importable from here
+from .wire import WireOutcome, encode_outcome as _encode_out
 
 __all__ = ["ProcessExecutor", "ProcessShardedCache", "ShmArena",
            "WireOutcome"]
@@ -415,67 +419,6 @@ def _dispatch(state: _WorkerState, kernel: IGTCache, op: str, payload):
     if op == "stop":
         return None
     raise ValueError(f"unknown worker op {op!r}")
-
-
-def _encode_out(out: ReadOutcome, first_block: int) -> tuple:
-    """Compact wire form of one outcome: ``(first_block, sizes, hit
-    mask, prefetched-hit mask, prefetches)`` — **no block keys**.  The
-    kernel serves an extent as consecutive blocks ``first..first+n-1``,
-    and the client still holds the request that produced the outcome,
-    so it can rebuild every key from ``(file_path, first_block + i)``.
-    What crosses the pipe is plain ints (pickle's C fast path); the
-    client's :class:`WireOutcome` materializes ``blocks`` lazily, so
-    the read-batch hot loop and metadata-only callers never pay for the
-    reconstruction at all."""
-    hits = pf = 0
-    sizes = []
-    for i, b in enumerate(out.blocks):
-        sizes.append(b.size)
-        if b.hit:
-            hits |= 1 << i
-        if b.prefetched_hit:
-            pf |= 1 << i
-    return first_block, sizes, hits, pf, out.prefetches
-
-
-class WireOutcome:
-    """Client-side view of a worker's ``ReadOutcome``: same duck type
-    (``blocks`` / ``prefetches`` / ``cached_bytes`` / ``remote_bytes``),
-    block objects (and their key strings) materialized on first
-    access from the originating request."""
-
-    __slots__ = ("_enc", "_path", "_blocks", "prefetches")
-
-    def __init__(self, enc: tuple, file_path: PathT) -> None:
-        self._enc = enc
-        self._path = file_path
-        self._blocks: Optional[List] = None
-        self.prefetches = enc[4]
-
-    @property
-    def blocks(self) -> List:
-        got = self._blocks
-        if got is None:
-            from .cache import path_key
-            from .igtcache import BlockResult
-            from .types import block_key
-            first, sizes, hits, pf, _ = self._enc
-            path = self._path
-            got = [BlockResult(path_key(block_key(path, first + i)), s,
-                               bool(hits >> i & 1), bool(pf >> i & 1))
-                   for i, s in enumerate(sizes)]
-            self._blocks = got
-        return got
-
-    @property
-    def remote_bytes(self) -> int:
-        _, sizes, hits, _, _ = self._enc
-        return sum(s for i, s in enumerate(sizes) if not hits >> i & 1)
-
-    @property
-    def cached_bytes(self) -> int:
-        _, sizes, hits, _, _ = self._enc
-        return sum(s for i, s in enumerate(sizes) if hits >> i & 1)
 
 
 def _inline_complete(kernel: IGTCache, outs: Sequence[ReadOutcome],

@@ -1,0 +1,18 @@
+"""Cache-as-a-service: the network cache daemon and its thin clients.
+
+``CacheDaemon`` wraps one ``CacheClient`` (in-process sharded engine or
+the supervised multi-process driver) behind a framed socket protocol —
+Unix-domain socket by default, TCP optionally — so many independent
+processes share one unified cache (the Hoard deployment shape,
+arXiv:1812.00669).  ``RemoteCacheClient`` is the thin client;
+``open_cache("cache://<sock-or-host:port>")`` builds one from a URI.
+
+See docs/API.md ("Cache daemon") and docs/RELIABILITY.md (the
+fault-of-the-client story: session leases, heartbeats, reclamation).
+"""
+from .client import RemoteCacheClient
+from .server import CacheDaemon
+from .uri import DaemonAddress, format_cache_uri, parse_cache_uri
+
+__all__ = ["CacheDaemon", "DaemonAddress", "RemoteCacheClient",
+           "format_cache_uri", "parse_cache_uri"]

@@ -1,0 +1,269 @@
+"""``RemoteCacheClient``: the thin client for a ``CacheDaemon``.
+
+Satisfies the ``CacheClient`` read surface — ``read`` / ``read_batch``
+returning ``ReadResult`` objects (outcomes are ``core.wire.WireOutcome``
+views decoded lazily from the shared compact codec), plus the stats
+family (``stats`` / ``snapshot`` / ``hit_ratio`` / ``fault_stats``) and
+the kernel passthroughs (``tick`` / ``pin`` / ``never_cache`` /
+``flush``) — but holds no kernel, no store, and no executor: every call
+is one framed request to the daemon.  ``open_cache("cache://...")``
+constructs one.
+
+Payload bytes: when the daemon granted shared-memory payloads (hello
+reply carries the arena name — same-node, UDS), ``("shm", off, n)``
+descriptors are copied out of the mapped arena and the slot is queued
+for release, piggybacked on the next request (no free ever needs its
+own round trip).  ``("raw", bytes)`` descriptors (TCP, arena spills)
+are wrapped zero-copy.
+
+Liveness: a background heartbeat thread renews the session lease at a
+third of the daemon's ``lease_s`` so an *idle* client isn't reaped.
+``close()`` says goodbye and releases the session immediately;
+``kill()`` exists for fault drills — it silences the client (and
+optionally drops the socket) exactly like a crashed process would, so
+tests and the chaos harness can watch the daemon's lease reclaim run.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.client import ReadResult
+from ..core.types import PathT
+from ..core.wire import WireOutcome
+from .uri import DaemonAddress, parse_cache_uri
+from .wire import PROTO_VERSION, recv_msg, send_msg
+
+__all__ = ["RemoteCacheClient"]
+
+
+class _RemoteMeta:
+    """``StoreMeta`` over the wire: the daemon answers from its store,
+    so remote callers can size reads (``client.meta.file_size(path)``)
+    without a local copy of the dataset layout."""
+
+    __slots__ = ("_client",)
+
+    def __init__(self, client: "RemoteCacheClient") -> None:
+        self._client = client
+
+    def file_size(self, path: PathT) -> int:
+        return self._client._request("file_size", path)
+
+    def subtree_bytes(self, path: PathT) -> int:
+        return self._client._request("subtree_bytes", path)
+
+
+class RemoteCacheClient:
+    """One session against a :class:`~repro.daemon.CacheDaemon`.
+
+    ``target`` is a ``cache://`` URI or a :class:`DaemonAddress`.
+    ``fetch_bytes`` mirrors ``CacheClient``: the default for per-call
+    ``fetch``.  ``now`` semantics also mirror the local client, with one
+    twist: omitted timestamps are stamped *by the daemon* — every
+    client of one daemon then shares a single coherent kernel timeline
+    instead of mixing per-process monotonic epochs.  Virtual-clock
+    callers pass ``now`` explicitly, which travels verbatim.
+    """
+
+    def __init__(self, target, *,
+                 fetch_bytes: bool = False,
+                 label: Optional[str] = None,
+                 heartbeat: bool = True,
+                 shm: bool = True,
+                 connect_timeout: float = 10.0) -> None:
+        address = (target if isinstance(target, DaemonAddress)
+                   else parse_cache_uri(str(target)))
+        self.address = address
+        self.fetch_bytes = fetch_bytes
+        self._lock = threading.RLock()
+        self._pending_frees: List[Tuple[int, int]] = []
+        self._closed = False
+        self._killed = False
+        self._zombie = None          # kill(): keeps the socket fd open
+        import socket as _socket
+        kind, addr = address.connect_args()
+        fam = _socket.AF_UNIX if kind == "uds" else _socket.AF_INET
+        self._sock = _socket.socket(fam, _socket.SOCK_STREAM)
+        self._sock.settimeout(connect_timeout)
+        self._sock.connect(addr)
+        self._sock.settimeout(None)
+        send_msg(self._sock, ("hello", (), {
+            "proto": PROTO_VERSION,
+            "pid": os.getpid(),
+            "label": label,
+            "shm": bool(shm),
+        }))
+        status, info = recv_msg(self._sock)
+        if status != "ok":
+            self._sock.close()
+            raise info
+        self.session_id = info["session"]
+        self.lease_s = info["lease_s"]
+        self.block_size = info["block_size"]
+        self._shm = None
+        if info.get("shm"):
+            from multiprocessing import shared_memory
+            self._shm = shared_memory.SharedMemory(name=info["shm"])
+        self.meta = _RemoteMeta(self)
+        self._hb_stop = threading.Event()
+        self._hb_thread = None
+        if heartbeat:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, daemon=True,
+                name=f"igt-daemon-hb-{self.session_id}")
+            self._hb_thread.start()
+
+    # --------------------------------------------------------------- wire
+    def _request(self, op: str, payload=None):
+        with self._lock:
+            if self._closed or self._killed:
+                raise ConnectionError("remote cache client is closed")
+            frees, self._pending_frees = self._pending_frees, []
+            try:
+                send_msg(self._sock, (op, frees, payload))
+                status, result = recv_msg(self._sock)
+            except (ConnectionError, OSError):
+                # slots we meant to free never reached the daemon; its
+                # lease reclaim will return them
+                self._closed = True
+                raise
+        if status == "err":
+            raise result
+        return result
+
+    def _heartbeat_loop(self) -> None:
+        interval = max(0.05, self.lease_s / 3.0)
+        while not self._hb_stop.wait(interval):
+            try:
+                self._request("heartbeat")
+            except BaseException:
+                return
+
+    # --------------------------------------------------------------- reads
+    def read(self, file_path: PathT, offset: int, size: int,
+             now: Optional[float] = None, *,
+             fetch: Optional[bool] = None) -> ReadResult:
+        want = self.fetch_bytes if fetch is None else fetch
+        enc, payload = self._request("read",
+                                     (file_path, offset, size, now, want))
+        return ReadResult(WireOutcome(enc, file_path),
+                          self._materialize(payload))
+
+    def read_batch(self, requests: Sequence[Tuple[PathT, int, int]],
+                   now: Optional[float] = None, *,
+                   fetch: Optional[bool] = None) -> List[ReadResult]:
+        want = self.fetch_bytes if fetch is None else fetch
+        requests = list(requests)
+        encs, payloads = self._request("read_batch", (requests, now, want))
+        return [ReadResult(WireOutcome(enc, fp), self._materialize(pl))
+                for (fp, _o, _s), enc, pl in zip(requests, encs, payloads)]
+
+    def _materialize(self, payload) -> Optional[np.ndarray]:
+        if payload is None:
+            return None
+        kind = payload[0]
+        if kind == "raw":
+            return np.frombuffer(payload[1], dtype=np.uint8)
+        _, off, n = payload
+        view = np.frombuffer(self._shm.buf, dtype=np.uint8, count=n,
+                             offset=off)
+        data = view.copy()
+        del view
+        with self._lock:
+            self._pending_frees.append((off, n))
+        return data
+
+    # -------------------------------------------------------- passthrough
+    @property
+    def stats(self):
+        return self._request("stats")
+
+    def hit_ratio(self) -> float:
+        return self._request("hit_ratio")
+
+    def snapshot(self) -> dict:
+        return self._request("snapshot")
+
+    def fault_stats(self) -> dict:
+        return self._request("fault_stats")
+
+    def shard_states(self):
+        return self._request("shard_states")
+
+    def daemon_stats(self) -> dict:
+        return self._request("daemon_stats")
+
+    def tick(self, now: Optional[float] = None) -> None:
+        self._request("tick", now)
+
+    def pin(self, path: PathT) -> None:
+        self._request("pin", path)
+
+    def never_cache(self, path: PathT) -> None:
+        self._request("never_cache", path)
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        return self._request("flush", timeout)
+
+    def heartbeat(self) -> dict:
+        """Explicit lease renewal (the background thread's op)."""
+        return self._request("heartbeat")
+
+    # ---------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Graceful goodbye: the daemon releases the session (and every
+        arena slot it still tracks) immediately — no lease wait."""
+        if self._closed or self._killed:
+            return
+        self._hb_stop.set()
+        try:
+            self._request("bye")
+        except (ConnectionError, OSError, EOFError):
+            pass
+        with self._lock:
+            self._closed = True
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover
+            pass
+        self._release_shm()
+
+    def kill(self, *, drop_connection: bool = False) -> None:
+        """Die like a crashed client (fault drills / chaos harness).
+
+        Default: go *silent* — heartbeats stop, the socket stays open
+        but unused (the wedged-process case; only the daemon's lease
+        can notice).  ``drop_connection=True`` closes the socket without
+        a goodbye instead (the killed-process case; the daemon sees EOF
+        and reclaims at once)."""
+        if self._closed:
+            return
+        self._hb_stop.set()
+        self._killed = True
+        if drop_connection:
+            try:
+                self._sock.close()
+            except OSError:  # pragma: no cover
+                pass
+        else:
+            self._zombie = self._sock      # hold the fd: no EOF, no FIN
+        self._release_shm()
+
+    def _release_shm(self) -> None:
+        if self._shm is not None:
+            try:
+                self._shm.close()
+            except BufferError:  # pragma: no cover - live views
+                pass
+            self._shm = None
+
+    def __enter__(self) -> "RemoteCacheClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -18,6 +18,13 @@ what lets the fault matrix in tests/test_chaos.py assert exact
 bookkeeping (conservation identities, zero lost reads) instead of
 sampling a race.
 
+PR 8 adds the *client* failure domain: ``client_kill`` strikes a
+registered daemon client (anything with a ``kill()`` — a
+``repro.daemon.RemoteCacheClient`` dies silently, socket held open, so
+only the daemon's session lease can notice), drilling the
+fault-of-the-client arc the same way ``kill``/``suspend`` drill the
+fault-of-the-worker one.
+
 Only the process driver has failure domains to strike; handing an
 in-process engine to the monkey is a ``TypeError``, not a silent no-op.
 """
@@ -33,16 +40,16 @@ from typing import Dict, List, Optional, Sequence, Set
 
 __all__ = ["ChaosMonkey", "ChaosSchedule", "ChaosStrike", "plan_strikes"]
 
-KINDS = ("kill", "suspend", "resume")
+KINDS = ("kill", "suspend", "resume", "client_kill")
 
 
 @dataclass(frozen=True)
 class ChaosStrike:
     """One planned failure: at trace step ``step``, do ``kind`` to shard
-    ``sid``."""
+    (or, for ``client_kill``, registered client) ``sid``."""
 
     step: int
-    kind: str          # "kill" | "suspend" | "resume"
+    kind: str          # "kill" | "suspend" | "resume" | "client_kill"
     sid: int
 
 
@@ -56,32 +63,51 @@ class ChaosMonkey:
     directly — a stopped worker is the hung-worker case: the pipe stays
     open, no EOF fires, and only heartbeat/RPC deadlines can notice.
 
+    ``clients`` registers daemon-client victims for the ``client_kill``
+    strike (index = sid): each must expose ``kill()`` — the
+    ``RemoteCacheClient`` drill that goes silent without closing the
+    socket, so the daemon's *lease*, not EOF, must reclaim the session.
+    ``target`` may be ``None`` when only client strikes are planned.
+
     Every strike lands in ``self.strikes`` (kind, sid, pid, generation,
     wall time) for post-run audit.
     """
 
-    def __init__(self, target) -> None:
-        driver = getattr(target, "engine", target)
-        if not hasattr(driver, "_channels") or \
-                not hasattr(driver, "_kill_worker"):
+    def __init__(self, target, clients: Sequence = ()) -> None:
+        driver = getattr(target, "engine", target) \
+            if target is not None else None
+        if driver is not None and (
+                not hasattr(driver, "_channels")
+                or not hasattr(driver, "_kill_worker")):
             raise TypeError(
                 "ChaosMonkey needs a ProcessShardedCache (or a CacheClient "
                 f"over one); got {type(driver).__name__} — in-process "
                 "engines have no worker processes to strike")
+        if driver is None and not clients:
+            raise TypeError("ChaosMonkey with no process driver needs "
+                            "at least one registered client victim")
         self.driver = driver
+        self.clients = list(clients)
         self.strikes: List[dict] = []
         self._suspended: Set[int] = set()
 
     # ------------------------------------------------------------- strikes
     def _log(self, kind: str, sid: int, pid: Optional[int]) -> None:
-        ch = self.driver._channels[sid]
+        gen = (self.driver._channels[sid].generation
+               if kind != "client_kill" else None)
         self.strikes.append({"kind": kind, "sid": sid, "pid": pid,
-                             "generation": ch.generation,
+                             "generation": gen,
                              "at": time.monotonic()})
+
+    def _require_driver(self, kind: str) -> None:
+        if self.driver is None:
+            raise RuntimeError(f"strike {kind!r} needs a process driver; "
+                               "this monkey only has client victims")
 
     def kill(self, sid: int, reason: str = "chaos") -> None:
         """SIGKILL the shard's current worker via the driver's kill path
         (fault event recorded, supervisor respawns if budget allows)."""
+        self._require_driver("kill")
         ch = self.driver._channels[sid]
         pid = ch.proc.pid
         self.driver._kill_worker(sid, reason)
@@ -92,6 +118,7 @@ class ChaosMonkey:
         """SIGSTOP the worker: alive to the OS, dead to its callers.
         Undetectable by pipe EOF — this is the case heartbeats and RPC
         deadlines exist for."""
+        self._require_driver("suspend")
         pid = self.driver._channels[sid].proc.pid
         try:
             os.kill(pid, signal.SIGSTOP)
@@ -105,6 +132,7 @@ class ChaosMonkey:
         the supervisor already killed and replaced it)."""
         if sid not in self._suspended:
             return
+        self._require_driver("resume")
         self._suspended.discard(sid)
         pid = self.driver._channels[sid].proc.pid
         try:
@@ -119,6 +147,14 @@ class ChaosMonkey:
         for sid in list(self._suspended):
             self.resume(sid)
 
+    def client_kill(self, sid: int) -> None:
+        """Kill registered client ``sid`` the crashed-process way: it
+        goes silent (heartbeats stop, socket stays open), so the
+        daemon's session lease — not EOF — must notice and reclaim."""
+        victim = self.clients[sid]
+        victim.kill()
+        self._log("client_kill", sid, getattr(victim, "pid", None))
+
     def strike(self, kind: str, sid: int) -> None:
         if kind not in KINDS:
             raise ValueError(f"unknown strike kind {kind!r}; "
@@ -128,17 +164,22 @@ class ChaosMonkey:
 
 def plan_strikes(n_steps: int, *, n_shards: int, seed: int = 0,
                  n_strikes: int = 1, kinds: Sequence[str] = ("kill",),
-                 min_step: int = 1, resume_after: int = 3
-                 ) -> List[ChaosStrike]:
+                 min_step: int = 1, resume_after: int = 3,
+                 n_clients: int = 0) -> List[ChaosStrike]:
     """Deterministic strike schedule: ``n_strikes`` failures at distinct
     pseudo-random steps in ``[min_step, n_steps)``, kinds and target
     shards drawn from the same seeded stream.  Every planned ``suspend``
     is paired with a ``resume`` ``resume_after`` steps later (clamped to
     the trace) so a schedule can never leave a worker wedged past the
-    run.  Same (seed, shape) → same schedule, always."""
+    run.  ``client_kill`` strikes draw their victim from
+    ``range(n_clients)`` instead of the shard space.  Same (seed,
+    shape) → same schedule, always."""
     for k in kinds:
-        if k not in ("kill", "suspend"):
-            raise ValueError(f"plannable kinds are kill/suspend, got {k!r}")
+        if k not in ("kill", "suspend", "client_kill"):
+            raise ValueError("plannable kinds are kill/suspend/"
+                             f"client_kill, got {k!r}")
+    if "client_kill" in kinds and n_clients <= 0:
+        raise ValueError("client_kill strikes need n_clients > 0")
     if n_steps <= min_step:
         raise ValueError("trace too short for the requested strike window")
     rng = random.Random(seed)
@@ -147,7 +188,8 @@ def plan_strikes(n_steps: int, *, n_shards: int, seed: int = 0,
     out: List[ChaosStrike] = []
     for step in steps:
         kind = kinds[rng.randrange(len(kinds))]
-        sid = rng.randrange(n_shards)
+        sid = rng.randrange(n_clients if kind == "client_kill"
+                            else n_shards)
         out.append(ChaosStrike(step, kind, sid))
         if kind == "suspend":
             out.append(ChaosStrike(min(n_steps - 1, step + resume_after),

@@ -98,7 +98,8 @@ class ClusterSim:
                  trace_alloc: bool = False,
                  stop_job_at: Optional[Tuple[int, float]] = None,
                  chaos_events: Optional[List[Tuple[float, str, int]]]
-                 = None) -> None:
+                 = None,
+                 chaos_clients: Optional[List] = None) -> None:
         self.suite = suite
         self.link = SharedLink(bandwidth_Bps, latency_s)
         # Accept either layer: a CacheClient (open_cache path) or a bare
@@ -121,9 +122,14 @@ class ClusterSim:
         self.stop_job_at = stop_job_at       # (job_id, time): forced stop (Fig 11)
         # (virtual time, kind, sid) strikes against a process-backed
         # engine: the chaos arc (kill → degraded reads → respawn →
-        # re-warm) plays out inside the simulated trace.  Only valid
-        # when the engine is a multi-process driver (sim.chaos).
+        # re-warm) plays out inside the simulated trace.  Worker strikes
+        # (kill/suspend/resume) need a multi-process driver (sim.chaos);
+        # "client_kill" strikes target ``chaos_clients[sid]`` instead —
+        # daemon clients registered as victims, so a trace can lose a
+        # remote cache client mid-run and the daemon's lease reclaim
+        # plays out alongside the simulated workload.
         self.chaos_events = list(chaos_events or [])
+        self.chaos_clients = list(chaos_clients or [])
         self._chaos = None
         self._chaos_log: List[dict] = []
         self._events: List[Tuple[float, int, str, object]] = []
@@ -205,7 +211,16 @@ class ClusterSim:
     def _strike(self, kind: str, sid: int) -> None:
         if self._chaos is None:
             from .chaos import ChaosMonkey
-            self._chaos = ChaosMonkey(self.engine)
+            driver_like = (hasattr(self.engine, "_channels")
+                           and hasattr(self.engine, "_kill_worker"))
+            if driver_like or not self.chaos_clients:
+                # preserves the TypeError for worker strikes against an
+                # in-process engine with no client victims either
+                self._chaos = ChaosMonkey(self.engine,
+                                          clients=self.chaos_clients)
+            else:
+                self._chaos = ChaosMonkey(None,
+                                          clients=self.chaos_clients)
         self._chaos.strike(kind, sid)
         self._chaos_log.append({"t": self.now, "kind": kind, "sid": sid})
 

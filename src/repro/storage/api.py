@@ -650,6 +650,10 @@ def _ensure_builtin_schemes() -> None:
         return
     _BUILTINS_LOADED = True
     from . import local_fs, object_store  # noqa: F401  (register on import)
+    # cache:// — daemon endpoint addresses (repro.daemon), resolving to
+    # a DaemonAddress handle rather than a byte store; open_cache turns
+    # one into a connected RemoteCacheClient
+    from ..daemon import uri as _daemon_uri  # noqa: F401
 
 
 def _coerce(value: str):
@@ -675,6 +679,10 @@ def open_store(uri: str, **overrides):
     * ``file:///abs/dir`` — :class:`~repro.storage.local_fs.LocalFSStore`
       over a real directory tree (query: ``block_size``).
     * ``mem://`` — empty :class:`MemStore` (query: ``block_size``).
+    * ``cache:///run/igt.sock`` / ``cache://host:port`` — a running
+      cache daemon's endpoint (``repro.daemon``).  Resolves to a
+      ``DaemonAddress`` handle, not a byte store; hand it (or the URI)
+      to ``open_cache`` to connect a thin remote client.
     * ``faulty+<scheme>://...`` — the inner scheme's store wrapped in a
       :class:`FaultyStore`; query params configure the injector
       (``fail_rate``, ``permanent_rate``, ``jitter_s``, ``hang_rate``,

@@ -135,6 +135,34 @@ def test_fault_micro_smoke(tmp_path):
     assert "chr_gap_pct" in axis
 
 
+def test_daemon_micro_smoke(tmp_path):
+    """--smoke daemon_path axis: N forked ``open_cache("cache://...")``
+    client processes against one UDS daemon; aggregate metadata
+    throughput per client count merged into the shared overhead JSON
+    without clobbering other sections.  Scaling ordering is the full
+    run's claim — smoke asserts the pipeline and the accounting."""
+    from benchmarks import daemon_micro
+
+    out = tmp_path / "BENCH_overhead.json"
+    out.write_text(json.dumps({"results": {"10000": {"us_per_access": 1}}}))
+    rows = daemon_micro.main(smoke=True, json_path=out)
+    assert rows, "daemon_path smoke produced no CSV rows"
+    payload = json.loads(out.read_text())
+    assert payload["results"]["10000"]["us_per_access"] == 1  # preserved
+    axis = payload["daemon_path"]
+    assert axis["smoke"] is True
+    for n in (1, 2, 4):
+        point = axis[f"daemon_{n}"]
+        assert point["accesses_per_s"] > 0
+        assert point["us_per_access"] > 0
+        assert point["accesses"] == n * axis["n_accesses_per_client"]
+    assert axis["scaling_4_vs_1"] > 0
+    # every bench client said goodbye; nothing was lease-reaped or spilled
+    assert axis["daemon_stats"]["byes"] == 7
+    assert axis["daemon_stats"]["reaped"] == 0
+    assert axis["daemon_stats"]["served_reads"] > 0
+
+
 def test_prefetch_micro_client_axis_smoke(tmp_path):
     """--smoke client-path axis: kernel loop vs SimExecutor client vs
     ThreadedExecutor client, merged into the shared overhead JSON without

@@ -58,6 +58,30 @@ def test_open_store_registry_schemes():
         open_store("no-scheme-at-all")
 
 
+def test_cache_scheme_registry_roundtrip():
+    """cache:// resolves through the same registry as the stores, but
+    yields a daemon *address* (not a store): open_cache dispatches on it
+    to build a RemoteCacheClient instead of a kernel."""
+    from repro.daemon import DaemonAddress, format_cache_uri
+
+    assert "cache" in registered_schemes()
+    uds = open_store("cache:///tmp/igt.sock")
+    assert isinstance(uds, DaemonAddress)
+    assert uds.is_cache_address
+    assert uds.kind == "uds" and uds.path == "/tmp/igt.sock"
+    assert uds.connect_args() == ("uds", "/tmp/igt.sock")
+    tcp = open_store("cache://127.0.0.1:7171?label=trainer")
+    assert tcp.kind == "tcp" and tcp.connect_args() == \
+        ("tcp", ("127.0.0.1", 7171))
+    assert tcp.params == {"label": "trainer"}
+    # the address remembers its URI, and format round-trips
+    assert uds.uri.startswith("cache://")
+    assert open_store(format_cache_uri(uds)).connect_args() == \
+        uds.connect_args()
+    with pytest.raises(ValueError):
+        open_store("cache://")            # no endpoint at all
+
+
 def test_open_store_faulty_wrapper():
     st = open_store("faulty+sim://default?fail_rate=1.0&seed=3")
     assert isinstance(st, FaultyStore)

@@ -1,0 +1,138 @@
+"""Tiered-storage benchmark (the ``tier_path`` axis).
+
+The tiering claim: at *equal total capacity*, splitting the budget into
+a RAM kernel tier plus a local-disk spill tier beats a flat RAM cache
+on the mixed paper suite.  The kernel never retains sequential blocks
+(eager eviction / demand read-through), so flat RAM beyond the
+random/skewed working sets is wasted — the disk tier captures scan sets
+between epochs and re-serves them at disk cost instead of crossing the
+shared remote link.
+
+Protocol: ``build_world(scale, seed, cache_ratio=0.5)`` (0.5 so the flat
+baseline is *saturated*, not capacity-starved); flat = IGTCache at the
+full budget; tiered = IGTCache at ``ram_frac`` of the budget over a
+``TieredStore(mode="index")`` whose disk tier holds the remainder.
+Metrics: combined CHR ((kernel hits + disk hits) / lookups), remote
+link bytes-moved, and mean JCT.  A bytes-mode spill/promote throughput
+micro rides along.  Results merge into ``BENCH_overhead.json`` under
+``tier_path`` (``--smoke`` → the smoke file; exercised by
+tests/test_bench_smoke.py).
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+# .common bootstraps sys.path with REPO_ROOT/src — must import before repro
+from .common import build_world, csv_row, merge_overhead_section, scaled_cfg
+
+from repro.core import bundle_client
+from repro.core.types import MB
+from repro.sim import ClusterSim
+from repro.storage import MemStore, TieredStore
+
+RAM_FRAC = 0.8
+
+
+def _run(suite, store, ram, disk):
+    """One ClusterSim pass: IGTCache kernel over ``ram`` bytes, with an
+    index-mode disk tier of ``disk`` bytes (0 = flat baseline)."""
+    backing = store
+    if disk > 0:
+        backing = TieredStore(store, mode="index", ram_bytes=ram,
+                              disk_bytes=disk)
+    client = bundle_client("igtcache", backing, ram, cfg=scaled_cfg(ram))
+    res = ClusterSim(suite, client).run()
+    kh, km = res.stats["hits"], res.stats["misses"]
+    disk_hits = res.tier_stats.get("disk_hits", 0)
+    return {
+        "capacity_mb": round((ram + disk) / MB, 1),
+        "ram_mb": round(ram / MB, 1),
+        "disk_mb": round(disk / MB, 1),
+        "kernel_chr": round(res.hit_ratio, 4),
+        "combined_chr": round((kh + disk_hits) / max(1, kh + km), 4),
+        "link_mb": round(res.link_bytes / MB, 1),
+        "avg_jct_s": round(res.avg_jct, 2),
+        "makespan_s": round(res.makespan, 2),
+        "tier": {k: res.tier_stats[k]
+                 for k in ("disk_hits", "prefetch_disk_hits", "misses",
+                           "admission_skips", "disk_evictions")
+                 if k in res.tier_stats},
+    }
+
+
+def _spill_micro(n_blocks: int, block: int = 256 * 1024):
+    """Bytes-mode disk-tier throughput: spill N blocks, promote them
+    back; MB/s each way (checksummed file writes + verified reads)."""
+    mem = MemStore(block_size=block)
+    rng = np.random.default_rng(0)
+    for i in range(n_blocks):
+        mem.add_file(("micro", f"f{i:04d}"),
+                     rng.integers(0, 256, block, dtype=np.uint8).tobytes())
+    with tempfile.TemporaryDirectory(prefix="igt-bench-") as root:
+        ts = TieredStore(mem, ram_bytes=block, disk_bytes=(n_blocks + 1) * block,
+                         spill_dir=root)
+        paths = [("micro", f"f{i:04d}", "#0") for i in range(n_blocks)]
+        t0 = time.perf_counter()
+        for p in paths:
+            ts.fetch_range(p, 0, block)      # fill + spill on RAM pressure
+        spill_dt = time.perf_counter() - t0
+        spilled = ts.tier_stats()["spills"]
+        t0 = time.perf_counter()
+        for p in paths:
+            ts.fetch_range(p, 0, block)      # disk hit + promote
+        read_dt = time.perf_counter() - t0
+        hits = ts.tier_stats()["disk_hits"]
+    total_mb = n_blocks * block / MB
+    return {"blocks": n_blocks, "block_kb": block // 1024,
+            "spilled": spilled, "disk_hits": hits,
+            "spill_MBps": round(total_mb / spill_dt, 1),
+            "promote_MBps": round(total_mb / read_dt, 1)}
+
+
+def main(smoke: bool = False, seed: int = 0, json_path=None):
+    scale = 0.02 if smoke else 0.05
+    suite, store, cap = build_world(scale, seed, cache_ratio=0.5)
+    ram = int(cap * RAM_FRAC)
+
+    section = {"smoke": smoke, "seed": seed, "scale": scale,
+               "cache_ratio": 0.5, "ram_frac": RAM_FRAC}
+    section["flat"] = _run(suite, store, cap, 0)
+    # fresh suite: the sim mutates job state in place
+    suite, store, _cap = build_world(scale, seed, cache_ratio=0.5)
+    section["tiered"] = _run(suite, store, ram, cap - ram)
+    section["spill_micro"] = _spill_micro(16 if smoke else 64)
+
+    flat, tiered = section["flat"], section["tiered"]
+    section["chr_gain"] = round(tiered["combined_chr"] - flat["kernel_chr"], 4)
+    section["link_mb_saved"] = round(flat["link_mb"] - tiered["link_mb"], 1)
+    if not smoke:
+        # the acceptance claim: equal total budget, tiered wins both axes
+        assert tiered["combined_chr"] > flat["kernel_chr"], section
+        assert tiered["link_mb"] < flat["link_mb"], section
+
+    rows = [
+        csv_row("tier_path.flat_chr", flat["kernel_chr"],
+                f"link_mb={flat['link_mb']} jct={flat['avg_jct_s']}"),
+        csv_row("tier_path.tiered_combined_chr", tiered["combined_chr"],
+                f"kernel_chr={tiered['kernel_chr']} "
+                f"link_mb={tiered['link_mb']} jct={tiered['avg_jct_s']}"),
+        csv_row("tier_path.chr_gain", section["chr_gain"],
+                f"link_mb_saved={section['link_mb_saved']}"),
+        csv_row("tier_path.spill_MBps", section["spill_micro"]["spill_MBps"],
+                f"promote_MBps={section['spill_micro']['promote_MBps']}"),
+    ]
+    merge_overhead_section("tier_path", section, json_path)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="down-scaled run for the test job")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seed=args.seed)

@@ -114,6 +114,31 @@ def marginal_benefit(cmu: "CacheManageUnit", now: float, cfg: CacheConfig) -> De
     return DemandEstimate(1e-9 * lam, cmu.used >= 0.95 * cmu.quota, can_shrink)
 
 
+@dataclass(frozen=True)
+class PlacementHint:
+    """Where one stream's blocks belong in a RAM/disk tier hierarchy
+    (consumed by ``storage.tiers.TieredStore`` via ``note_pattern``)."""
+
+    pattern: Pattern
+    pin_ram: bool           # hot working set: keep RAM-resident (sticky)
+
+
+def placement_hint(cmu: "CacheManageUnit", now: float,
+                   cfg: CacheConfig) -> PlacementHint:
+    """Tier placement verdict for one stream, from the same classifier
+    state that drives allocation: SKEWED hot sets pin in RAM; a RANDOM
+    set that *fits* its quota is worth pinning too (uniform residency);
+    SEQUENTIAL/UNKNOWN data is never worth displacing RAM blocks —
+    sequential extents are disk-eligible and stream from the spill tier.
+    """
+    pat = cmu.effective_pattern()
+    if pat is Pattern.SKEWED:
+        return PlacementHint(pat, True)
+    if pat is Pattern.RANDOM:
+        return PlacementHint(pat, cmu.dataset_bytes <= cmu.quota)
+    return PlacementHint(pat, False)
+
+
 class Rebalancer:
     """IGTCache's round-based quota shifting (§4)."""
 

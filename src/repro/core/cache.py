@@ -353,6 +353,10 @@ class UnifiedCache:
         # sinks its ghost hits here so the cross-shard allocation round
         # can size unmet working sets from a bounded summary
         self.demand_sketch = DemandSketch(self.cfg)
+        # optional eviction tap (key, size): a tiered backing store
+        # registers its spill hook here (storage.tiers via IGTCache) —
+        # observation only, never feeds back into kernel decisions
+        self.evict_hook: Optional[Callable[[BlockKey, int], None]] = None
         self.default_cmu = CacheManageUnit(
             self.DEFAULT, capacity, self.cfg,
             on_evict=self._cmu_evicted, dataset_bytes=0)
@@ -363,6 +367,8 @@ class UnifiedCache:
     def _cmu_evicted(self, key: BlockKey, size: int) -> None:
         self.blocks.pop(key, None)
         self.stats.evictions += 1
+        if self.evict_hook is not None:
+            self.evict_hook(key, size)
 
     # -- queries ------------------------------------------------------------------
     def resident(self, key: BlockKey) -> bool:

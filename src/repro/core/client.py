@@ -1003,6 +1003,9 @@ class CacheClient:
             s["store"] = {"capabilities": caps.snapshot()}
         if self.breaker is not None:
             s.setdefault("store", {})["breaker"] = self.breaker.snapshot()
+        tiers = getattr(self.backing, "tier_stats", None)
+        if callable(tiers):
+            s.setdefault("store", {})["tiers"] = tiers()
         return s
 
     def fault_stats(self) -> dict:

@@ -44,7 +44,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .access_stream_tree import (AccessStream, AccessStreamTree,
                                  ObservedChain, analyze_streams)
-from .allocation import FluidAllocator, QuiverAllocator, Rebalancer
+from .allocation import (FluidAllocator, QuiverAllocator, Rebalancer,
+                         placement_hint)
 from .cache import (CacheManageUnit, SubStream, UnifiedCache, path_key)
 from .eviction import EagerEviction
 from .meta import LevelCache, StoreMeta
@@ -214,6 +215,16 @@ class IGTCache:
         # user pinned (never evict / never TTL) or banned (never cache)
         self._pinned = _PrefixSet()
         self._never_cache = _PrefixSet()
+        # tiered-backing placement hooks (storage.tiers): a store exposing
+        # note_evicted gets every kernel eviction (its spill signal), one
+        # exposing note_pattern gets per-dataset placement verdicts from
+        # tick().  Observation-only taps — kernel decisions never read
+        # tier state, so a tiered stack stays bitwise-identical to flat.
+        ev = getattr(meta, "note_evicted", None)
+        if callable(ev):
+            self.cache.evict_hook = ev
+        self._placement_hook = getattr(meta, "note_pattern", None)
+        self._placement_sent: Dict[str, Tuple[str, bool]] = {}
 
     # -------------------------------------------------------- user controls
     def pin(self, path: PathT) -> None:
@@ -739,6 +750,23 @@ class IGTCache:
                 self.fluid.rebalance(self.workload_cmus(), now,
                                      self._workload_capacity())
                 self._give_rest_to_default()
+        if self._placement_hook is not None:
+            self._emit_placement(now)
+
+    def _emit_placement(self, now: float) -> None:
+        """Push changed per-dataset placement verdicts to a tiered
+        backing store (``meta.note_pattern``).  Change-detected so the
+        steady state costs one dict probe per stream per tick."""
+        hook = self._placement_hook
+        for path, cmu in self.cache.cmus.items():
+            if cmu is self.cache.default_cmu:
+                continue
+            hint = placement_hint(cmu, now, self.cfg)
+            cur = (hint.pattern.value, hint.pin_ram)
+            top = path[0]
+            if self._placement_sent.get(top) != cur:
+                self._placement_sent[top] = cur
+                hook(top, hint.pattern.value, hint.pin_ram)
 
     def workload_cmus(self) -> List[CacheManageUnit]:
         """Non-default CacheManageUnits of this engine (shard-local view;

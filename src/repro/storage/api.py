@@ -650,6 +650,7 @@ def _ensure_builtin_schemes() -> None:
         return
     _BUILTINS_LOADED = True
     from . import local_fs, object_store  # noqa: F401  (register on import)
+    from . import s3  # noqa: F401  (s3:// + mock-s3://)
     # cache:// — daemon endpoint addresses (repro.daemon), resolving to
     # a DaemonAddress handle rather than a byte store; open_cache turns
     # one into a connected RemoteCacheClient
@@ -683,10 +684,27 @@ def open_store(uri: str, **overrides):
       cache daemon's endpoint (``repro.daemon``).  Resolves to a
       ``DaemonAddress`` handle, not a byte store; hand it (or the URI)
       to ``open_cache`` to connect a thin remote client.
+    * ``s3://host:port/bucket`` — ranged object store over HTTP
+      (``repro.storage.s3.S3Store``; query: ``block_size``,
+      ``timeout_s``); ``mock-s3://<name>/<bucket>?dirs=D&files=N&
+      file_kb=K&seed=S`` — the same store pointed at a deterministic
+      in-process loopback server built from the URI spec.
+    * ``tiered+<scheme>://...`` — the inner scheme's store wrapped in a
+      :class:`~repro.storage.tiers.TieredStore` (RAM tier +
+      spill-to-disk tier with pattern-aware placement); query params
+      configure the tiers (``ram_mb``/``ram_bytes``,
+      ``disk_mb``/``disk_bytes``, ``spill_dir``, ``mode``,
+      ``target_hit_rate``, ``hit_window``).
     * ``faulty+<scheme>://...`` — the inner scheme's store wrapped in a
       :class:`FaultyStore`; query params configure the injector
       (``fail_rate``, ``permanent_rate``, ``jitter_s``, ``hang_rate``,
       ``hang_s``, ``slow_s``, ``corrupt_rate``, ``seed``).
+
+    Wrapper schemes compose left-to-right (``faulty+tiered+sim://...``
+    injects faults *above* the tiers; ``tiered+faulty+mem://...`` hides
+    injected faults behind tier hits).  The composed URI is stamped on
+    the outermost wrapper, so ``store_spec`` reconstructs the whole
+    stack — injector, tiers and inner store — in a respawned worker.
 
     ``overrides`` win over query params.  Unknown schemes raise
     ``ValueError`` listing what is registered.
@@ -706,7 +724,23 @@ def open_store(uri: str, **overrides):
                       "seed", "sleep")
         fault_kw = {k: params.pop(k) for k in fault_keys if k in params}
         inner = open_store(inner_uri, **params)
-        return FaultyStore(inner, **fault_kw)
+        wrapper = FaultyStore(inner, **fault_kw)
+        # stamp the *composed* URI on the wrapper: without it,
+        # ``store_spec`` would read ``uri``/``reopen_by_uri`` through
+        # ``__getattr__`` delegation from the inner store and a respawned
+        # worker would silently reconstruct the stack *without* fault
+        # injection (the registry double-wrap bug)
+        _record_uri(wrapper, uri)
+        return wrapper
+    if url.scheme.startswith("tiered+"):
+        from .tiers import TIER_KEYS, TieredStore
+        inner_uri = urlunsplit((url.scheme[len("tiered+"):], url.netloc,
+                                url.path, "", ""))
+        tier_kw = {k: params.pop(k) for k in TIER_KEYS if k in params}
+        inner = open_store(inner_uri, **params)
+        wrapper = TieredStore(inner, **tier_kw)
+        _record_uri(wrapper, uri)
+        return wrapper
     factory = _SCHEMES.get(url.scheme)
     if factory is None:
         raise ValueError(f"unknown store scheme {url.scheme!r}; registered: "

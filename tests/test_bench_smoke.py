@@ -163,6 +163,33 @@ def test_daemon_micro_smoke(tmp_path):
     assert axis["daemon_stats"]["served_reads"] > 0
 
 
+def test_tier_micro_smoke(tmp_path):
+    """--smoke tier_path axis: flat-RAM vs RAM+disk at equal total
+    capacity on the down-scaled paper suite, plus the bytes-mode
+    spill/promote throughput micro, merged into the shared overhead JSON
+    without clobbering other sections.  The tiered-wins ordering is the
+    full run's claim — smoke asserts the pipeline and the accounting."""
+    from benchmarks import tier_micro
+
+    out = tmp_path / "BENCH_overhead.json"
+    out.write_text(json.dumps({"results": {"10000": {"us_per_access": 1}}}))
+    rows = tier_micro.main(smoke=True, json_path=out)
+    assert rows, "tier_path smoke produced no CSV rows"
+    payload = json.loads(out.read_text())
+    assert payload["results"]["10000"]["us_per_access"] == 1  # preserved
+    axis = payload["tier_path"]
+    assert axis["smoke"] is True
+    assert axis["flat"]["kernel_chr"] > 0
+    assert axis["flat"]["capacity_mb"] == axis["tiered"]["capacity_mb"]
+    assert axis["tiered"]["combined_chr"] >= axis["tiered"]["kernel_chr"]
+    assert axis["tiered"]["tier"]["disk_hits"] > 0
+    assert axis["flat"]["link_mb"] > 0 and axis["tiered"]["link_mb"] > 0
+    micro = axis["spill_micro"]
+    assert micro["spilled"] == micro["blocks"] - 1   # one block stays in RAM
+    assert micro["disk_hits"] > 0
+    assert micro["spill_MBps"] > 0 and micro["promote_MBps"] > 0
+
+
 def test_prefetch_micro_client_axis_smoke(tmp_path):
     """--smoke client-path axis: kernel loop vs SimExecutor client vs
     ThreadedExecutor client, merged into the shared overhead JSON without

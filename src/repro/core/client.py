@@ -1157,9 +1157,17 @@ def open_cache(store, capacity: Optional[int] = None, *,
         params = dict(store.params)
         params.setdefault("fetch_bytes", fetch_bytes)
         allowed = ("fetch_bytes", "label", "heartbeat", "shm",
-                   "connect_timeout")
-        return RemoteCacheClient(
-            store, **{k: v for k, v in params.items() if k in allowed})
+                   "connect_timeout", "reconnect", "degraded",
+                   "max_backoff_s", "rpc_timeout_s")
+        kw = {k: v for k, v in params.items() if k in allowed}
+        if backing is not None:
+            # degraded reads while the daemon is away need a local byte
+            # path; a backing store (object or URI) provides it
+            if isinstance(backing, str):
+                from ..storage.api import open_store
+                backing = open_store(backing)
+            kw["backing"] = backing
+        return RemoteCacheClient(store, **kw)
     if capacity is None:
         raise TypeError("open_cache() missing required argument: "
                         "'capacity' (only cache:// stores omit it)")

@@ -21,14 +21,38 @@ from dataclasses import dataclass, field
 from typing import Deque, List, Optional
 
 __all__ = [
-    "RestartBudget", "SHARD_DOWN", "SHARD_RESTARTING", "SHARD_UP",
-    "ShardUnavailableError",
+    "DaemonUnavailableError", "RestartBudget", "SHARD_DOWN",
+    "SHARD_RESTARTING", "SHARD_UP", "ShardUnavailableError",
 ]
 
 # Shard lifecycle states (strings: cheap to report through stats dicts).
+# The daemon supervisor reuses the same vocabulary for the whole-daemon
+# lifecycle (up / restarting / down), reported via its events log.
 SHARD_UP = "up"                  # worker alive, serving RPCs
 SHARD_RESTARTING = "restarting"  # worker died, respawn in progress
 SHARD_DOWN = "down"              # restart budget exhausted: permanently out
+
+
+class DaemonUnavailableError(ConnectionError):
+    """The cache daemon behind a ``RemoteCacheClient`` is unreachable —
+    crashed, draining, or gone past its restart budget.
+
+    Subclasses ``ConnectionError`` so pre-existing handlers (which
+    matched the raw socket errors the old client surfaced) keep working;
+    new callers catch this type for the daemon analog of
+    :class:`ShardUnavailableError`.  With ``degraded=True`` (the client
+    default) readers never see it — reads are served straight from the
+    backing store until the daemon returns; it surfaces only for
+    ``degraded=False`` clients and for operations that *need* the daemon
+    (stats, snapshots, flush-with-result).
+
+    ``state`` is the client's view of the connection
+    (``"down"`` while reconnecting, ``"closed"`` after ``close()``).
+    """
+
+    def __init__(self, message: str, *, state: str = "down") -> None:
+        super().__init__(message)
+        self.state = state
 
 
 class ShardUnavailableError(RuntimeError):

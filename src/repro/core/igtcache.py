@@ -802,6 +802,80 @@ class IGTCache:
         s["used_bytes"] = self.cache.used_bytes()
         return s
 
+    # ---------------------------------------------------------- warm restart
+    def warm_state(self) -> dict:
+        """Serializable hot-state manifest for warm restart
+        (``daemon.journal``): CMU roots/quotas, resident block keys,
+        sticky pin/ban prefixes, and the per-dataset placement verdicts
+        already pushed to a tiered store.  Metadata only — the kernel
+        never held payload bytes, so :meth:`warm_admit` on a fresh
+        engine reproduces the residency exactly."""
+        cmus = [{"root": tuple(path), "quota": int(cmu.quota),
+                 "dataset_bytes": int(cmu.dataset_bytes)}
+                for path, cmu in self.iter_workload_cmus()]
+        return {
+            "cmus": cmus,
+            "resident": [(key, int(size))
+                         for key, (size, _c) in self.cache.blocks.items()],
+            "pins": [tuple(p) for p in self._pinned],
+            "never_cache": [tuple(p) for p in self._never_cache],
+            "verdicts": dict(self._placement_sent),
+        }
+
+    def warm_admit(self, state: dict, now: float) -> dict:
+        """Re-admit a :meth:`warm_state` manifest into this (fresh)
+        engine: recreate CMUs with their journaled quotas, replay
+        pins/bans, re-push placement verdicts (a tiered backing store
+        regains its hints before the first read), and re-insert the
+        resident keys — bytes arrive from the backing store on the
+        first hit's fetch, as for any metadata hit.  Idempotent; banned
+        or unadmittable keys are skipped, not errors.  Returns restore
+        counters."""
+        restored = {"cmus": 0, "blocks": 0, "bytes": 0, "pins": 0,
+                    "verdicts": 0, "skipped": 0}
+        for p in state.get("pins", ()):
+            self.pin(tuple(p))
+            restored["pins"] += 1
+        for p in state.get("never_cache", ()):
+            self.never_cache(tuple(p))
+        for row in state.get("cmus", ()):
+            root = tuple(row["root"])
+            cmu = self.cache.cmus.get(root)
+            if cmu is None:
+                db = int(row.get("dataset_bytes") or 0)
+                if db <= 0:
+                    try:
+                        db = self.meta.subtree_bytes(root)
+                    except Exception:
+                        db = 0
+                cmu = self.cache.create_cmu(root, db, now)
+                restored["cmus"] += 1
+            want = int(row.get("quota", 0))
+            if want > cmu.quota:
+                self._set_static_quota(cmu, want)
+        for top, verdict in (state.get("verdicts") or {}).items():
+            pattern, pin_ram = verdict
+            self._placement_sent[str(top)] = (str(pattern), bool(pin_ram))
+            if self._placement_hook is not None:
+                self._placement_hook(str(top), str(pattern), bool(pin_ram))
+            restored["verdicts"] += 1
+        for key, size in state.get("resident", ()):
+            if self.cache.resident(key):
+                continue
+            path = tuple(key.split("/"))
+            file_path, b = split_block_key(path)
+            if b is None or self._never_cache.covers(file_path):
+                restored["skipped"] += 1
+                continue
+            cmu = self.cache.cmu_for_path(path)
+            sub = cmu.substream(cmu.root_path, Pattern.UNKNOWN)
+            if self.cache.insert_key(key, int(size), cmu, sub):
+                restored["blocks"] += 1
+                restored["bytes"] += int(size)
+            else:
+                restored["skipped"] += 1
+        return restored
+
 
 def informative_depth(levels: List[Tuple[str, int, int]]) -> int:
     """Deepest level index with an informative (>1 entry) listing — the depth

@@ -786,6 +786,46 @@ class ShardedIGTCache(ShardRouting):
         s["used_bytes"] = self.used_bytes()
         return s
 
+    # ---------------------------------------------------------- warm restart
+    def warm_state(self) -> dict:
+        """Cluster-wide warm-restart manifest: per-shard CMU/residency
+        manifests merged (every key names its shard via path routing, so
+        the merge loses nothing); pins/bans are broadcast state — any
+        shard's copy is the full set."""
+        states = [s.warm_state() for s in self.shards]
+        merged = {"cmus": [], "resident": [], "verdicts": {},
+                  "pins": states[0]["pins"],
+                  "never_cache": states[0]["never_cache"]}
+        for st in states:
+            merged["cmus"].extend(st["cmus"])
+            merged["resident"].extend(st["resident"])
+            merged["verdicts"].update(st["verdicts"])
+        return merged
+
+    def warm_admit(self, state: dict, now: float) -> dict:
+        """Route a merged manifest back onto the shards (the same
+        path-hash routing reads use, so every entry lands on the shard
+        that journaled it) and sum the restore counters."""
+        per = [{"cmus": [], "resident": [], "verdicts": {},
+                "pins": state.get("pins", ()),
+                "never_cache": state.get("never_cache", ())}
+               for _ in self.shards]
+        for row in state.get("cmus", ()):
+            per[self.shard_id(tuple(row["root"]))]["cmus"].append(row)
+        for key, size in state.get("resident", ()):
+            per[self.shard_id(tuple(key.split("/")))]["resident"].append(
+                (key, size))
+        for top, verdict in (state.get("verdicts") or {}).items():
+            per[self.shard_id((str(top),))]["verdicts"][top] = verdict
+        total: Dict[str, int] = {}
+        for shard, st in zip(self.shards, per):
+            got = shard.warm_admit(st, now)
+            for k, v in got.items():
+                total[k] = total.get(k, 0) + v
+        # pins/bans were replayed once per shard; report the set size
+        total["pins"] = len(state.get("pins", ()))
+        return total
+
 
 # Either engine satisfies the same public read/prefetch/tick/stats surface;
 # callers (cluster sim, training pipeline, benchmarks) annotate with this.

@@ -46,16 +46,19 @@ from ..core.client import CacheClient, open_cache
 from ..core.procdriver import ShmArena, _RegionAllocator
 from ..core.types import MB
 from ..core.wire import encode_outcome
+from .journal import CacheJournal
 from .uri import DaemonAddress, format_cache_uri
 from .wire import (ConnectionClosed, PROTO_VERSION, ProtocolError, recv_msg,
                    send_msg)
 
-__all__ = ["CacheDaemon", "DEFAULT_LEASE_S"]
+__all__ = ["CacheDaemon", "DEFAULT_LEASE_S", "DEFAULT_SNAPSHOT_EVERY_S"]
 
 DEFAULT_LEASE_S = 5.0
 DEFAULT_DAEMON_ARENA = 16 * MB
 # per-session bound on remembered prefetch candidates (reclaim window)
 CANDIDATE_WINDOW = 4096
+# journal snapshot cadence (journal_dir configured; reaper-thread driven)
+DEFAULT_SNAPSHOT_EVERY_S = 2.0
 
 
 def _pending_count(engine) -> int:
@@ -74,7 +77,7 @@ class _Session:
     bounded window of prefetch candidates its reads triggered."""
 
     __slots__ = ("sid", "conn", "label", "pid", "use_shm", "deadline",
-                 "live", "candidates", "reclaimed", "graceful")
+                 "live", "candidates", "reclaimed", "graceful", "send_lock")
 
     def __init__(self, sid: int, conn, label: str, pid: Optional[int],
                  use_shm: bool, deadline: float) -> None:
@@ -88,6 +91,9 @@ class _Session:
         self.candidates: "OrderedDict" = OrderedDict()
         self.reclaimed = False
         self.graceful = False
+        # serializes frames onto this connection: the serve thread's
+        # replies vs the drain path's out-of-band going_down notice
+        self.send_lock = threading.Lock()
 
 
 class CacheDaemon:
@@ -105,6 +111,18 @@ class CacheDaemon:
     even a heartbeat) for this long is presumed dead and reclaimed.
     ``arena_bytes`` sizes the shared-memory payload arena for same-node
     clients (0 disables it — all payloads stream inline).
+
+    ``journal_dir`` makes the daemon crash-consistent (see
+    ``daemon.journal``): sticky pins/bans are journaled synchronously,
+    the engine's warm-restart manifest (CMU roots/quotas, resident
+    keys, placement verdicts) is snapshotted every
+    ``snapshot_every_s``, and a daemon constructed over the same
+    directory **warm-starts** — pins replayed, verdicts re-pushed, hot
+    blocks re-admitted (``restore_stats``), while a PR 9 tiered store
+    re-indexes its spill files independently.  ``install_sigterm=True``
+    registers a SIGTERM handler that runs :meth:`drain` (graceful
+    stop-accept → notify → flush → final snapshot → close); default off
+    so embedding processes keep their own signal disposition.
     """
 
     def __init__(self, store=None, capacity: Optional[int] = None, *,
@@ -114,6 +132,10 @@ class CacheDaemon:
                  arena_bytes: int = DEFAULT_DAEMON_ARENA,
                  candidate_window: int = CANDIDATE_WINDOW,
                  backlog: int = 16,
+                 journal_dir: Optional[str] = None,
+                 snapshot_every_s: float = DEFAULT_SNAPSHOT_EVERY_S,
+                 journal_fsync: bool = False,
+                 install_sigterm: bool = False,
                  **open_cache_kw) -> None:
         if isinstance(store, CacheClient):
             if capacity is not None or open_cache_kw:
@@ -126,6 +148,16 @@ class CacheDaemon:
                                  "or a pre-built CacheClient")
             self.client = open_cache(store, capacity, **open_cache_kw)
         self.lease_s = float(lease_s)
+        # ---- durable state (crash consistency)
+        self.journal: Optional[CacheJournal] = None
+        self.restore_stats: dict = {"mode": "none"}
+        self._snapshot_every = float(snapshot_every_s)
+        self._last_snapshot = time.monotonic()
+        self._sticky_pins: "OrderedDict" = OrderedDict()
+        self._sticky_bans: "OrderedDict" = OrderedDict()
+        if journal_dir is not None:
+            self.journal = CacheJournal(journal_dir, fsync=journal_fsync)
+            self.restore_stats = self._restore(self.journal)
         self._candidate_window = candidate_window
         self._block_size = self.client.cfg.block_size
         self._arena = ShmArena(arena_bytes, 1) if arena_bytes > 0 else None
@@ -146,6 +178,8 @@ class CacheDaemon:
         self._served = 0
         self._cancelled_candidates = 0
         self._closing = False
+        self._draining = False
+        self._crashed = False
         self._started = False
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -174,6 +208,88 @@ class CacheDaemon:
             self._uds_path = uds
             self.address = DaemonAddress("uds", path=uds)
         self._listener.listen(backlog)
+        if install_sigterm:
+            import signal as _signal
+            try:
+                _signal.signal(
+                    _signal.SIGTERM,
+                    lambda *_a: threading.Thread(
+                        target=self.drain, name="igt-daemon-drain",
+                        daemon=True).start())
+            except ValueError:  # pragma: no cover - not the main thread
+                pass
+
+    # -------------------------------------------------- durable state
+    def _restore(self, journal: CacheJournal) -> dict:
+        """Warm-start from the journal directory: fold the snapshot and
+        the replayed records into one manifest, then re-admit it into
+        the (fresh) engine.  Engines without ``warm_admit`` (the
+        process driver keeps kernel state worker-side) still get the
+        sticky pins/bans replayed — the documented degradation."""
+        t0 = time.monotonic()
+        snap, records = journal.load()
+        state = dict(snap or {})
+        pins = {tuple(p) for p in state.get("pins", ())}
+        bans = {tuple(p) for p in state.get("never_cache", ())}
+        verdicts = dict(state.get("verdicts") or {})
+        for rec in records:
+            if not rec:
+                continue
+            if rec[0] == "pin":
+                pins.add(tuple(rec[1]))
+            elif rec[0] == "never_cache":
+                bans.add(tuple(rec[1]))
+            elif rec[0] == "verdict":
+                verdicts[str(rec[1])] = (rec[2], bool(rec[3]))
+        state["pins"] = sorted(pins)
+        state["never_cache"] = sorted(bans)
+        state["verdicts"] = verdicts
+        for p in state["pins"]:
+            self._sticky_pins[p] = None
+        for p in state["never_cache"]:
+            self._sticky_bans[p] = None
+        out = {"snapshot": snap is not None, "records": len(records),
+               "mode": "cold"}
+        warm = getattr(self.client.engine, "warm_admit", None)
+        if snap is None and not records:
+            pass                            # nothing durable yet: cold
+        elif callable(warm):
+            out.update(warm(state, time.monotonic()))
+            out["mode"] = "warm"
+        else:
+            for p in state["pins"]:
+                self.client.pin(p)
+            for p in state["never_cache"]:
+                self.client.never_cache(p)
+            out["mode"] = "sticky-only"
+        out["restore_s"] = time.monotonic() - t0
+        return out
+
+    def _journal_record(self, record) -> None:
+        if self.journal is None:
+            return
+        try:
+            self.journal.append(record)
+        except OSError:  # pragma: no cover - sick journal disk
+            pass
+
+    def write_snapshot(self) -> bool:
+        """Snapshot the engine's warm-restart manifest (+ the sticky
+        sets the daemon itself tracked) into the journal, resetting the
+        log.  Returns False when no journal is configured."""
+        if self.journal is None:
+            return False
+        ws = getattr(self.client.engine, "warm_state", None)
+        state = ws() if callable(ws) else {}
+        with self._lock:
+            pins = {tuple(p) for p in state.get("pins", ())}
+            pins.update(self._sticky_pins)
+            bans = {tuple(p) for p in state.get("never_cache", ())}
+            bans.update(self._sticky_bans)
+        state["pins"] = sorted(pins)
+        state["never_cache"] = sorted(bans)
+        self.journal.write_snapshot(state)
+        return True
 
     # ----------------------------------------------------------- lifecycle
     @property
@@ -194,6 +310,75 @@ class CacheDaemon:
         reap.start()
         return self
 
+    def drain(self, timeout: float = 10.0) -> None:
+        """Graceful shutdown (the SIGTERM path): stop accepting, tell
+        every live session the daemon is ``going_down`` (an out-of-band
+        status frame — the client marks the connection down instead of
+        diagnosing a crash from EOF), flush in-flight prefetches, write
+        a final snapshot, then close.  Idempotent."""
+        with self._lock:
+            if self._draining or self._closing:
+                return
+            self._draining = True
+        try:
+            self._listener.close()
+        except OSError:  # pragma: no cover
+            pass
+        for sess in list(self._sessions.values()):
+            try:
+                if sess.send_lock.acquire(timeout=1.0):
+                    try:
+                        send_msg(sess.conn, ("going_down", None))
+                    finally:
+                        sess.send_lock.release()
+            except (ConnectionError, OSError):
+                pass                        # that client is already gone
+        try:
+            self.client.flush(timeout=timeout)
+        except Exception:  # pragma: no cover - flush is best-effort here
+            pass
+        try:
+            self.write_snapshot()
+        except Exception:  # pragma: no cover - sick journal disk
+            pass
+        self.close()
+
+    def crash(self) -> None:
+        """Abrupt death for drills (the in-process stand-in for
+        ``SIGKILL``): every socket is closed mid-conversation — no
+        ``going_down``, no flush, **no final snapshot** (recovery must
+        work from the journal's last periodic snapshot + log) — and the
+        stale UDS socket path is deliberately left behind so the
+        respawn exercises the bind-over-stale-path race.  The engine is
+        still closed (it lives in *this* process; leaking its executor
+        threads would poison the test process), but only after the
+        sockets are dead, mirroring the ordering a real kill gives
+        clients."""
+        with self._lock:
+            if self._closing:
+                return
+            self._crashed = True
+            self._closing = True
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:  # pragma: no cover
+            pass
+        for sess in list(self._sessions.values()):
+            try:
+                sess.conn.close()
+            except OSError:  # pragma: no cover
+                pass
+        if self.journal is not None:
+            self.journal.close()
+        try:
+            self.client.close()
+        except Exception:  # pragma: no cover - already half-dead
+            pass
+        if self._arena is not None:
+            self._arena.close()
+        # NOTE: self._uds_path is NOT unlinked — the stale socket stays.
+
     def close(self) -> None:
         if self._closing:
             return
@@ -212,6 +397,12 @@ class CacheDaemon:
             self.client.flush(timeout=10.0)
         except Exception:  # pragma: no cover - flush is best-effort here
             pass
+        if self.journal is not None:
+            try:
+                self.write_snapshot()
+            except Exception:  # pragma: no cover - sick journal disk
+                pass
+            self.journal.close()
         self.client.close()
         if self._arena is not None:
             self._arena.close()
@@ -264,14 +455,15 @@ class CacheDaemon:
                                 payload.get("pid"), use_shm,
                                 time.monotonic() + self.lease_s)
                 self._sessions[sid] = sess
-            send_msg(conn, ("ok", {
-                "proto": PROTO_VERSION,
-                "session": sid,
-                "lease_s": self.lease_s,
-                "block_size": self._block_size,
-                "shm": self._arena.name if use_shm else None,
-                "server_pid": os.getpid(),
-            }))
+            with sess.send_lock:
+                send_msg(conn, ("ok", {
+                    "proto": PROTO_VERSION,
+                    "session": sid,
+                    "lease_s": self.lease_s,
+                    "block_size": self._block_size,
+                    "shm": self._arena.name if use_shm else None,
+                    "server_pid": os.getpid(),
+                }))
             while True:
                 op, frees, payload = recv_msg(conn)
                 sess.deadline = time.monotonic() + self.lease_s
@@ -279,19 +471,23 @@ class CacheDaemon:
                     self._apply_frees(sess, frees)
                 if op == "bye":
                     sess.graceful = True
-                    send_msg(conn, ("ok", None))
+                    with sess.send_lock:
+                        send_msg(conn, ("ok", None))
                     return
                 try:
                     result = self._dispatch(sess, op, payload)
                 except BaseException as e:
                     try:
-                        send_msg(conn, ("err", e))
+                        with sess.send_lock:
+                            send_msg(conn, ("err", e))
                     except (ConnectionError, OSError):
                         raise
                     except Exception:   # unpicklable: degrade to repr
-                        send_msg(conn, ("err", RuntimeError(repr(e))))
+                        with sess.send_lock:
+                            send_msg(conn, ("err", RuntimeError(repr(e))))
                     continue
-                send_msg(conn, ("ok", result))
+                with sess.send_lock:
+                    send_msg(conn, ("ok", result))
         except (ConnectionClosed, ConnectionError, OSError, EOFError,
                 ProtocolError):
             pass                            # peer died: reclaim below
@@ -337,9 +533,17 @@ class CacheDaemon:
             return None
         if op == "pin":
             c.pin(payload)
+            key = tuple(payload)
+            with self._lock:
+                self._sticky_pins[key] = None
+            self._journal_record(("pin", key))
             return None
         if op == "never_cache":
             c.never_cache(payload)
+            key = tuple(payload)
+            with self._lock:
+                self._sticky_bans[key] = None
+            self._journal_record(("never_cache", key))
             return None
         if op == "flush":
             return c.flush(payload)
@@ -447,6 +651,13 @@ class CacheDaemon:
             for sess in list(self._sessions.values()):
                 if now > sess.deadline:
                     self._reclaim(sess, "lease")
+            if (self.journal is not None and not self._draining
+                    and now - self._last_snapshot >= self._snapshot_every):
+                self._last_snapshot = now
+                try:
+                    self.write_snapshot()
+                except Exception:  # pragma: no cover - sick journal disk
+                    pass
 
     # ------------------------------------------------------------- stats
     def daemon_stats(self) -> dict:
@@ -460,6 +671,11 @@ class CacheDaemon:
                 "disconnects": self._disconnects,
                 "byes": self._byes,
                 "cancelled_candidates": self._cancelled_candidates,
+                "draining": self._draining,
+                "crashed": self._crashed,
+                "restore": dict(self.restore_stats),
+                "journal": (self.journal.stats.snapshot()
+                            if self.journal is not None else None),
             }
         with self._alloc_lock:
             out["arena_total"] = self._arena_total

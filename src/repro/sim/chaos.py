@@ -25,6 +25,16 @@ only the daemon's session lease can notice), drilling the
 fault-of-the-client arc the same way ``kill``/``suspend`` drill the
 fault-of-the-worker one.
 
+PR 10 adds the *daemon* failure domain: ``daemon_kill`` crashes a
+supervised cache daemon abruptly (sockets die mid-conversation, no
+final snapshot — the SIGKILL stand-in; the
+``repro.daemon.DaemonSupervisor`` notices and respawns on the same
+socket path, warm-starting from the journal), and ``daemon_restart``
+rolls it gracefully (SIGTERM shape: drain → ``going_down`` to
+sessions → final snapshot → respawn).  Register the supervisor via
+``ChaosMonkey(daemon=...)``; the drill asserts the full kill →
+degraded reads → respawn → reconnect → CHR re-convergence arc.
+
 Only the process driver has failure domains to strike; handing an
 in-process engine to the monkey is a ``TypeError``, not a silent no-op.
 """
@@ -40,16 +50,19 @@ from typing import Dict, List, Optional, Sequence, Set
 
 __all__ = ["ChaosMonkey", "ChaosSchedule", "ChaosStrike", "plan_strikes"]
 
-KINDS = ("kill", "suspend", "resume", "client_kill")
+KINDS = ("kill", "suspend", "resume", "client_kill", "daemon_kill",
+         "daemon_restart")
 
 
 @dataclass(frozen=True)
 class ChaosStrike:
     """One planned failure: at trace step ``step``, do ``kind`` to shard
-    (or, for ``client_kill``, registered client) ``sid``."""
+    (or, for ``client_kill``, registered client) ``sid``.  The daemon
+    strikes ignore ``sid`` — there is one supervised daemon."""
 
     step: int
     kind: str          # "kill" | "suspend" | "resume" | "client_kill"
+                       # | "daemon_kill" | "daemon_restart"
     sid: int
 
 
@@ -73,7 +86,8 @@ class ChaosMonkey:
     wall time) for post-run audit.
     """
 
-    def __init__(self, target, clients: Sequence = ()) -> None:
+    def __init__(self, target, clients: Sequence = (),
+                 daemon=None) -> None:
         driver = getattr(target, "engine", target) \
             if target is not None else None
         if driver is not None and (
@@ -83,18 +97,27 @@ class ChaosMonkey:
                 "ChaosMonkey needs a ProcessShardedCache (or a CacheClient "
                 f"over one); got {type(driver).__name__} — in-process "
                 "engines have no worker processes to strike")
-        if driver is None and not clients:
+        if daemon is not None and (
+                not hasattr(daemon, "kill_daemon")
+                or not hasattr(daemon, "drain_restart")):
+            raise TypeError(
+                "daemon= needs a DaemonSupervisor (kill_daemon/"
+                f"drain_restart); got {type(daemon).__name__} — an "
+                "unsupervised daemon would stay dead after the strike")
+        if driver is None and not clients and daemon is None:
             raise TypeError("ChaosMonkey with no process driver needs "
-                            "at least one registered client victim")
+                            "at least one registered client victim or a "
+                            "supervised daemon")
         self.driver = driver
         self.clients = list(clients)
+        self.daemon = daemon
         self.strikes: List[dict] = []
         self._suspended: Set[int] = set()
 
     # ------------------------------------------------------------- strikes
     def _log(self, kind: str, sid: int, pid: Optional[int]) -> None:
         gen = (self.driver._channels[sid].generation
-               if kind != "client_kill" else None)
+               if kind in ("kill", "suspend", "resume") else None)
         self.strikes.append({"kind": kind, "sid": sid, "pid": pid,
                              "generation": gen,
                              "at": time.monotonic()})
@@ -155,6 +178,28 @@ class ChaosMonkey:
         victim.kill()
         self._log("client_kill", sid, getattr(victim, "pid", None))
 
+    def _require_daemon(self, kind: str) -> None:
+        if self.daemon is None:
+            raise RuntimeError(f"strike {kind!r} needs a supervised "
+                               "daemon (ChaosMonkey(daemon=...))")
+
+    def daemon_kill(self, sid: int = 0) -> None:
+        """Crash the supervised daemon abruptly (SIGKILL stand-in):
+        every session socket dies mid-conversation, no final snapshot.
+        The supervisor respawns within its restart budget; clients see
+        EOF, serve degraded reads, and reconnect to the same path."""
+        self._require_daemon("daemon_kill")
+        self.daemon.kill_daemon()
+        self._log("daemon_kill", sid, None)
+
+    def daemon_restart(self, sid: int = 0) -> None:
+        """Roll the daemon gracefully (SIGTERM shape): drain — sessions
+        get ``going_down``, executor flushed, final snapshot written —
+        then respawn immediately on the same socket path."""
+        self._require_daemon("daemon_restart")
+        self.daemon.drain_restart()
+        self._log("daemon_restart", sid, None)
+
     def strike(self, kind: str, sid: int) -> None:
         if kind not in KINDS:
             raise ValueError(f"unknown strike kind {kind!r}; "
@@ -175,9 +220,10 @@ def plan_strikes(n_steps: int, *, n_shards: int, seed: int = 0,
     ``range(n_clients)`` instead of the shard space.  Same (seed,
     shape) → same schedule, always."""
     for k in kinds:
-        if k not in ("kill", "suspend", "client_kill"):
-            raise ValueError("plannable kinds are kill/suspend/"
-                             f"client_kill, got {k!r}")
+        if k not in ("kill", "suspend", "client_kill", "daemon_kill",
+                     "daemon_restart"):
+            raise ValueError("plannable kinds are kill/suspend/client_kill/"
+                             f"daemon_kill/daemon_restart, got {k!r}")
     if "client_kill" in kinds and n_clients <= 0:
         raise ValueError("client_kill strikes need n_clients > 0")
     if n_steps <= min_step:
@@ -188,8 +234,11 @@ def plan_strikes(n_steps: int, *, n_shards: int, seed: int = 0,
     out: List[ChaosStrike] = []
     for step in steps:
         kind = kinds[rng.randrange(len(kinds))]
-        sid = rng.randrange(n_clients if kind == "client_kill"
-                            else n_shards)
+        if kind in ("daemon_kill", "daemon_restart"):
+            sid = 0                       # one supervised daemon
+        else:
+            sid = rng.randrange(n_clients if kind == "client_kill"
+                                else n_shards)
         out.append(ChaosStrike(step, kind, sid))
         if kind == "suspend":
             out.append(ChaosStrike(min(n_steps - 1, step + resume_after),

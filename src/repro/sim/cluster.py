@@ -117,23 +117,38 @@ class ClusterSim:
                  stop_job_at: Optional[Tuple[int, float]] = None,
                  chaos_events: Optional[List[Tuple[float, str, int]]]
                  = None,
-                 chaos_clients: Optional[List] = None) -> None:
+                 chaos_clients: Optional[List] = None,
+                 chaos_daemon=None) -> None:
         self.suite = suite
         self.link = SharedLink(bandwidth_Bps, latency_s)
-        # Accept either layer: a CacheClient (open_cache path) or a bare
-        # kernel.  Either way the sim re-routes prefetch transport onto its
-        # own link — inside the simulation, background bytes must contend
-        # for the modeled bandwidth, so an inline/threaded executor would
-        # be wrong here.  A passed client is reused (its previous executor
-        # is closed, with queued candidates cancelled on the kernel).
-        if isinstance(engine, CacheClient):
+        # Accept any of three layers: a CacheClient (open_cache path), a
+        # bare kernel, or a RemoteCacheClient session against a running
+        # CacheDaemon.  For the local layers the sim re-routes prefetch
+        # transport onto its own link — inside the simulation, background
+        # bytes must contend for the modeled bandwidth, so an
+        # inline/threaded executor would be wrong here.  A passed client
+        # is reused (its previous executor is closed, with queued
+        # candidates cancelled on the kernel).  A *remote* client has no
+        # local executor to re-route (the daemon owns prefetch transport)
+        # — the sim charges its demand misses to the link as pure-demand
+        # transfers and drives the shared kernel timeline via explicit
+        # ``now`` stamps; this is the harness the daemon-kill chaos
+        # drills run in (wall-clock daemon recovery under a virtual-time
+        # trace, reconciled via ``at()`` probes).
+        self._remote = bool(getattr(engine, "is_remote_cache_client",
+                                    False))
+        if self._remote:
+            self.client = engine
+            self.engine = None
+        elif isinstance(engine, CacheClient):
             self.client = engine
             self.client.set_executor(LinkExecutor(self.link))
+            self.engine = self.client.engine
         else:
             self.client = CacheClient(engine,
                                       executor=LinkExecutor(self.link),
                                       clock=lambda: self.now)
-        self.engine = self.client.engine
+            self.engine = self.client.engine
         self.local_latency = local_latency_s
         self.local_bw = local_bandwidth_Bps
         self.disk_latency = disk_latency_s
@@ -144,7 +159,8 @@ class ClusterSim:
         backing = getattr(self.client, "backing", None)
         self._tier = backing if callable(getattr(backing, "sim_read",
                                                  None)) else None
-        self.client.executor.tier = self._tier
+        if not self._remote:
+            self.client.executor.tier = self._tier
         self.trace_alloc = trace_alloc
         self.stop_job_at = stop_job_at       # (job_id, time): forced stop (Fig 11)
         # (virtual time, kind, sid) strikes against a process-backed
@@ -157,6 +173,9 @@ class ClusterSim:
         # plays out alongside the simulated workload.
         self.chaos_events = list(chaos_events or [])
         self.chaos_clients = list(chaos_clients or [])
+        # a DaemonSupervisor: the victim of daemon_kill/daemon_restart
+        # strikes (sim.chaos) — the daemon failure domain
+        self.chaos_daemon = chaos_daemon
         self._chaos = None
         self._chaos_log: List[dict] = []
         self._events: List[Tuple[float, int, str, object]] = []
@@ -227,8 +246,15 @@ class ClusterSim:
             self._chaos.resume_all()
         util = self.link.busy_time / max(1e-9, self.now)
         reb = getattr(self.engine, "global_rebalancer", None)
-        return SimResult(jct=jct, hit_ratio=self.engine.hit_ratio(),
-                         stats=self.engine.snapshot(), makespan=self.now,
+        # remote mode: the daemon owns the kernel — ask over the wire
+        # (best-effort: the trace may end with the daemon still away)
+        src = self.client if self._remote else self.engine
+        try:
+            hit_ratio, stats = src.hit_ratio(), src.snapshot()
+        except ConnectionError:         # incl. DaemonUnavailableError
+            hit_ratio, stats = -1.0, {}
+        return SimResult(jct=jct, hit_ratio=hit_ratio,
+                         stats=stats, makespan=self.now,
                          link_utilization=util, step_trace=self._step_trace,
                          alloc_trace=self._alloc_trace,
                          chaos_log=self._chaos_log,
@@ -243,14 +269,17 @@ class ClusterSim:
             from .chaos import ChaosMonkey
             driver_like = (hasattr(self.engine, "_channels")
                            and hasattr(self.engine, "_kill_worker"))
-            if driver_like or not self.chaos_clients:
+            if driver_like or not (self.chaos_clients
+                                   or self.chaos_daemon is not None):
                 # preserves the TypeError for worker strikes against an
-                # in-process engine with no client victims either
+                # in-process engine with no other victims either
                 self._chaos = ChaosMonkey(self.engine,
-                                          clients=self.chaos_clients)
+                                          clients=self.chaos_clients,
+                                          daemon=self.chaos_daemon)
             else:
                 self._chaos = ChaosMonkey(None,
-                                          clients=self.chaos_clients)
+                                          clients=self.chaos_clients,
+                                          daemon=self.chaos_daemon)
         self._chaos.strike(kind, sid)
         self._chaos_log.append({"t": self.now, "kind": kind, "sid": sid})
 

@@ -163,6 +163,40 @@ def test_daemon_micro_smoke(tmp_path):
     assert axis["daemon_stats"]["served_reads"] > 0
 
 
+def test_daemon_recovery_smoke(tmp_path):
+    """--smoke daemon_recovery axis: kill a journaled daemon under its
+    supervisor and record the recovery arc — degraded-read latency,
+    respawn + journal restore, client reconnect, and the warm-vs-cold
+    ramp back to a fully-hitting pass — merged into the shared overhead
+    JSON without clobbering other sections."""
+    from benchmarks import daemon_micro
+
+    out = tmp_path / "BENCH_overhead.json"
+    out.write_text(json.dumps({"results": {"10000": {"us_per_access": 1}}}))
+    rows = daemon_micro.run_recovery(smoke=True, json_path=out)
+    assert rows, "daemon_recovery smoke produced no CSV rows"
+    payload = json.loads(out.read_text())
+    assert payload["results"]["10000"]["us_per_access"] == 1  # preserved
+    axis = payload["daemon_recovery"]
+    assert axis["smoke"] is True
+    # the daemon died, the supervisor respawned it, the journal restored
+    # the manifest, and the client reconnected — each leg timed
+    assert axis["respawn_s"] > 0
+    assert axis["reconnect_s"] > 0
+    assert axis["restore"]["mode"] == "warm"
+    assert axis["restore"]["blocks"] > 0
+    # reads flowed (degraded) the whole time the daemon was away
+    assert axis["degraded"]["reads"] > 0
+    assert axis["degraded"]["us_per_read"] > 0
+    assert axis["client"]["degraded_reads"] == axis["degraded"]["reads"]
+    assert axis["client"]["reconnects"] >= 1
+    # the acceptance contrast: a warm restart reaches a fully-hitting
+    # pass at least as fast as the cold ramp did, and both converge
+    assert axis["warm_ramp"]["final_pass_chr"] == 1.0
+    assert axis["cold_ramp"]["final_pass_chr"] == 1.0
+    assert axis["warm_ramp"]["passes"] <= axis["cold_ramp"]["passes"]
+
+
 def test_tier_micro_smoke(tmp_path):
     """--smoke tier_path axis: flat-RAM vs RAM+disk at equal total
     capacity on the down-scaled paper suite, plus the bytes-mode

@@ -366,6 +366,44 @@ def test_graceful_close_releases_session_immediately():
         assert st["arena_free"] == st["arena_total"]
 
 
+def test_lease_expiry_races_reconnect_no_double_free():
+    """PR 10 satellite: the old session's lease expires *while the same
+    client is already back on a new session*.  A client that loses its
+    connection (here: forced down with the old socket held open by a
+    dup'd fd, so no EOF ever reaches the daemon) reconnects and keeps
+    reading; the abandoned session still owns arena slots until its
+    lease runs out.  The reaper must reclaim exactly the old session's
+    slots — never the new session's — and the arena must balance to
+    baseline afterwards (a double-free or cross-session free would
+    corrupt the allocator's accounting)."""
+    store = mk_store(1)
+    files = all_files(store)[:6]
+    with CacheDaemon(store, 32 * MB, cfg=CFG, lease_s=0.6) as d:
+        cli = RemoteCacheClient(d.uri, fetch_bytes=True, heartbeat=False,
+                                max_backoff_s=0.1, backing=store)
+        _read_some(cli, files)                 # old session holds slots
+        assert d.daemon_stats()["live_slots"] > 0
+        zombie = cli._sock.dup()               # keep the daemon's side open
+        cli._mark_down("drill: connection lost")
+        wait_until(lambda: cli.state == "up", what="reconnect")
+        assert cli.reconnects == 1
+        assert d.daemon_stats()["sessions"] == 2   # zombie + successor
+        # the new session reads while the old lease runs down
+        outs = _read_some(cli, files, now=10.0)
+        assert all(r.data is not None for r in outs)
+        wait_until(lambda: d.daemon_stats()["reaped"] == 1,
+                   what="old-session lease reclaim")
+        st = d.daemon_stats()
+        assert st["sessions"] == 1             # successor untouched
+        # reclaim took only the old session's slots; the new session
+        # still serves, and its in-flight slots still account cleanly
+        outs = _read_some(cli, files, now=20.0)
+        assert all(r.data is not None for r in outs)
+        zombie.close()
+        cli.close()
+        _assert_reclaimed_to_baseline(d, reaped=1)
+
+
 # ---------------------------------------------------------------------------
 # chaos harness: the client_kill strike
 # ---------------------------------------------------------------------------
